@@ -1,0 +1,31 @@
+"""Fig. 5: warm-up duration as the threshold K grows (% of the swarm
+chunk universe).  Paper: ~99.5 s @5%, ~238.8 s @10%, ~1084.7 s @50%."""
+from __future__ import annotations
+
+from repro.core import SwarmConfig, simulate_round
+
+from .common import banner, save
+
+
+def run(n: int = 100, K: int = 206, fast: bool = False,
+        sweep=(0.05, 0.10, 0.25, 0.50)):
+    banner("Fig. 5 — warm-up duration vs threshold K")
+    if fast:
+        n, K, sweep = 100, 206, (0.05, 0.10, 0.25)
+    rows = {}
+    prev = 0
+    for pct in sweep:
+        cfg = SwarmConfig(n=n, chunks_per_update=K, s_max=100_000,
+                          seed=0, warmup_threshold_pct=pct)
+        res = simulate_round(cfg, bt_mode="fluid")
+        t = int(res.metrics.t_warm)
+        rows[f"{pct:.0%}"] = t
+        mono = "OK" if t >= prev else "NON-MONOTONE!"
+        print(f"K={pct:4.0%}: t_warm={t:6d}s  [{mono}]")
+        prev = t
+    save("fig5_threshold", {"n": n, "K": K, "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

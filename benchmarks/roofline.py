@@ -1,0 +1,72 @@
+"""§Roofline report: aggregate the dry-run artifacts into the per-cell
+three-term roofline table (compute / memory / collective seconds per
+step, dominant term, MODEL_FLOPS/HLO ratio).
+
+Reads results/dryrun_baseline/*.json (written by repro.launch.dryrun);
+does NOT itself compile anything, so it runs on the 1-device container.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import banner, save
+
+BASE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def load_records(dirname: str = "dryrun_baseline", mesh: str = "single"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(BASE, dirname,
+                                           f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def run(dirname: str = "", fast: bool = False):
+    if not dirname:
+        # prefer the post-§Perf artifacts when present
+        dirname = "dryrun_opt" if glob.glob(
+            os.path.join(BASE, "dryrun_opt", "*.json")) \
+            else "dryrun_baseline"
+    banner(f"§Roofline — per-cell terms from {dirname} (single-pod)")
+    recs = load_records(dirname)
+    if not recs:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return {}
+    print(f"{'arch':22s}{'shape':12s}{'GiB':>6s} {'t_comp':>9s} "
+          f"{'t_mem':>9s} {'t_coll':>9s}  {'dominant':10s} "
+          f"{'useful':>7s} {'mfu_bnd':>8s}")
+    rows = {}
+    for r in recs:
+        t = r["roofline"]
+        gb = r["memory"]["total_per_device_bytes"] / 2**30
+        key = f"{r['arch']}__{r['shape']}"
+        rows[key] = {
+            "t_compute_s": t["t_compute_s"],
+            "t_memory_s": t["t_memory_s"],
+            "t_collective_s": t["t_collective_s"],
+            "dominant": t["dominant"],
+            "useful_flops_ratio": t.get("useful_flops_ratio"),
+            "useful_mfu_bound": t.get("useful_mfu_bound"),
+            "gib_per_device": gb,
+            "fits_16g": gb <= 16.0,
+        }
+        print(f"{r['arch']:22s}{r['shape']:12s}{gb:6.1f} "
+              f"{t['t_compute_s']:9.3f} {t['t_memory_s']:9.3f} "
+              f"{t['t_collective_s']:9.3f}  {t['dominant']:10s} "
+              f"{t.get('useful_flops_ratio', 0):7.2f} "
+              f"{t.get('useful_mfu_bound', 0):8.3f}")
+    n_fit = sum(1 for v in rows.values() if v["fits_16g"])
+    print(f"\n{n_fit}/{len(rows)} cells fit 16 GiB/device")
+    save("roofline_table", {"dirname": dirname, "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

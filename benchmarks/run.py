@@ -1,0 +1,58 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure
+plus the §Roofline aggregation.
+
+    PYTHONPATH=src python -m benchmarks.run            # fast defaults
+    PYTHONPATH=src python -m benchmarks.run --full     # paper scale
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale parameters (slow)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset, e.g. fig3,table3")
+    args = ap.parse_args(argv)
+    fast = not args.full
+
+    from . import (fig3_utilization, fig4_decomposition, fig5_threshold,
+                   fig6_7_asr, fig8_llm_scale, roofline, table2_learning,
+                   table3_scaling)
+
+    suite = {
+        "table2": lambda: table2_learning.run(fast=fast),
+        "fig3": lambda: fig3_utilization.run(fast=fast),
+        "fig4": lambda: fig4_decomposition.run(fast=fast),
+        "fig5": lambda: fig5_threshold.run(fast=fast),
+        "table3": lambda: table3_scaling.run(
+            fast=fast, sizes=(100, 200) if fast else (100, 200, 300)),
+        "fig6_7": lambda: fig6_7_asr.run(fast=fast),
+        "fig8": lambda: fig8_llm_scale.run(fast=fast),
+        "roofline": lambda: roofline.run(fast=fast),
+    }
+    only = [s for s in args.only.split(",") if s]
+    t0 = time.time()
+    failures = []
+    for name, fn in suite.items():
+        if only and name not in only:
+            continue
+        try:
+            fn()
+        except Exception as e:                       # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            failures.append((name, repr(e)))
+    print(f"\n=== benchmarks done in {time.time() - t0:.0f}s; "
+          f"{len(failures)} failures ===")
+    for name, err in failures:
+        print(f"  FAILED {name}: {err}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""Table III: end-to-end round cost scaling, 100-500 peers, Full
+privacy, GreedyFastestFirst, 51 MB model @ 256 KiB chunks.
+
+Paper: warm-up share stays ~11.5-12.4%, utilization 75-80%."""
+from __future__ import annotations
+
+from repro.core import SwarmConfig, simulate_round
+
+from .common import Timer, banner, save
+
+
+def run(sizes=(100, 200, 300), fast: bool = False, K: int = 206):
+    banner("Table III — scaling 100-500 peers (Full privacy)")
+    if fast:
+        sizes, K = (50, 100), 64
+    rows = {}
+    print(f"{'n':>5s} {'T_warm(s)':>10s} {'Share%':>8s} {'Util%':>7s} "
+          f"{'T_round(s)':>11s} {'wall(s)':>8s}")
+    for n in sizes:
+        cfg = SwarmConfig(n=n, chunks_per_update=K, s_max=200_000, seed=0,
+                          cand_cap=16384 if n > 150 else 0)
+        with Timer() as t:
+            res = simulate_round(cfg, bt_mode="fluid")
+        m = res.metrics
+        rows[n] = {"t_warm": int(m.t_warm),
+                   "share_pct": round(100 * m.warmup_share, 1),
+                   "util_pct": round(100 * m.warmup_utilization, 1),
+                   "t_round": int(m.t_round)}
+        print(f"{n:5d} {m.t_warm:10d} {100 * m.warmup_share:8.1f} "
+              f"{100 * m.warmup_utilization:7.1f} {m.t_round:11d} "
+              f"{t.seconds:8.1f}")
+    shares = [r["share_pct"] for r in rows.values()]
+    print(f"\nwarm-up share span: {min(shares):.1f}%..{max(shares):.1f}% "
+          f"(paper: 11.5%..12.4%)")
+    save("table3_scaling", {"K": K, "rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    big = "--big" in sys.argv
+    run(sizes=(100, 200, 300, 400, 500) if big else (100, 200, 300))

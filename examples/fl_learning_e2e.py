@@ -1,0 +1,30 @@
+"""End-to-end FL driver (the paper's kind of experiment, §V-B):
+train CFL vs GossipDFL vs FLTorrent on a synthetic non-IID dataset and
+show that FLTorrent's trajectory is identical to CFL (exact FedAvg over
+a real chunked/swarmed dissemination round) while Gossip attenuates.
+
+    PYTHONPATH=src python examples/fl_learning_e2e.py
+"""
+from repro.fl.client import LocalSpec
+from repro.fl.runner import FLConfig, run_experiment
+
+
+def main():
+    cfg = FLConfig(dataset="synth-cifar", model="mlp", dist="dir0.1",
+                   n_clients=10, rounds=8,
+                   local=LocalSpec(epochs=1, batch_size=32, lr=0.03),
+                   n_train=3000, n_test=800, seed=0, min_degree=5)
+    print("training 3 methods, 8 rounds, Dirichlet(0.1) non-IID ...")
+    results = {m: run_experiment(m, cfg)
+               for m in ("cfl", "gossip", "fltorrent")}
+    print(f"\n{'round':>6}" + "".join(f"{m:>12}" for m in results))
+    for r in range(cfg.rounds):
+        print(f"{r:6d}" + "".join(f"{res.accuracy[r]:12.3f}"
+                                  for res in results.values()))
+    flt = results["fltorrent"]
+    print(f"\nFLTorrent: clients agreed on every aggregate: "
+          f"{flt.agreement}; reconstruction rate {flt.reconstruct_frac:.0%}")
+
+
+if __name__ == "__main__":
+    main()

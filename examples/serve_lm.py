@@ -1,0 +1,18 @@
+"""Serve a (reduced) LM: batched prefill + greedy KV-cache decode —
+what the ``decode_32k`` / ``long_500k`` dry-run cells lower at
+production scale.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    serve_main(["--arch", "gemma2-2b", "--reduced", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16"])
+    serve_main(["--arch", "recurrentgemma-2b", "--reduced", "--batch", "2",
+                "--prompt-len", "24", "--gen", "8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Round-level checkpoint/restart: npz payload + JSON manifest.
+
+Fault-tolerance contract (paper §III-E mapped to the cluster setting):
+training state is durable at every FL-round boundary, so a failed pod
+re-joins at the next round exactly like a BitTorrent peer re-joining a
+swarm — ``restore_or_init`` is the single entry point the launcher calls
+on (re)start.  Writes are atomic (tmp + rename) so a crash mid-save
+never corrupts the latest good round, and ``keep`` bounds disk usage.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, round_idx: int, tree, *,
+                    meta: Optional[dict] = None, keep: int = 3) -> str:
+    """Atomically write ``round_<idx>.npz`` + manifest; GC old rounds.
+
+    Leaves are stored as raw byte buffers with dtype/shape recorded in
+    the manifest — npz has no native bf16/f8 support and silently
+    pickles them otherwise.
+    """
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {}
+    leaf_meta = []
+    for i, x in enumerate(leaves):
+        a = np.asarray(x)
+        arrays[f"leaf_{i}"] = np.frombuffer(a.tobytes(), np.uint8)
+        leaf_meta.append({"shape": list(a.shape), "dtype": str(a.dtype)})
+    payload = {
+        "round": round_idx,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "leaves": leaf_meta,
+        "meta": meta or {},
+    }
+    base = os.path.join(ckpt_dir, f"round_{round_idx:08d}")
+    # NOTE: suffix must end in .npz or np.savez silently appends one and
+    # the rename would move an empty file (torn checkpoint).
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp.npz")
+    os.close(fd)
+    np.savez(tmp, **arrays)
+    os.replace(tmp, base + ".npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".json.tmp")
+    os.close(fd)
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, base + ".json")
+    _gc(ckpt_dir, keep)
+    return base + ".npz"
+
+
+def _gc(ckpt_dir: str, keep: int):
+    rounds = sorted(_list_rounds(ckpt_dir))
+    for r in rounds[:-keep] if keep > 0 else []:
+        for ext in (".npz", ".json"):
+            try:
+                os.remove(os.path.join(ckpt_dir, f"round_{r:08d}{ext}"))
+            except FileNotFoundError:
+                pass
+
+
+def _list_rounds(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("round_") and name.endswith(".json"):
+            out.append(int(name[len("round_"):-len(".json")]))
+    return out
+
+
+def latest_round(ckpt_dir: str) -> Optional[int]:
+    rounds = _list_rounds(ckpt_dir)
+    return max(rounds) if rounds else None
+
+
+def load_checkpoint(ckpt_dir: str, round_idx: int, like_tree):
+    """Restore into the structure of ``like_tree`` (shape/dtype cast)."""
+    base = os.path.join(ckpt_dir, f"round_{round_idx:08d}")
+    with open(base + ".json") as f:
+        manifest = json.load(f)
+    with np.load(base + ".npz") as z:
+        raw = [z[f"leaf_{i}"] for i in range(manifest["n_leaves"])]
+    leaves = [np.frombuffer(buf.tobytes(), np.dtype(lm["dtype"]))
+              .reshape(lm["shape"])
+              for buf, lm in zip(raw, manifest["leaves"])]
+    like_leaves, treedef = _flatten(like_tree)
+    assert len(leaves) == len(like_leaves), "checkpoint/model mismatch"
+    cast = [np.asarray(x).astype(l.dtype).reshape(l.shape)
+            for x, l in zip(leaves, like_leaves)]
+    return treedef.unflatten(cast), manifest["meta"]
+
+
+def restore_or_init(ckpt_dir: str, init_fn: Callable[[], tuple], *,
+                    like_fn: Optional[Callable] = None):
+    """Resume from the latest round if one exists, else initialize.
+
+    ``init_fn() -> (tree, meta)``.  Returns (tree, meta, start_round).
+    """
+    r = latest_round(ckpt_dir)
+    if r is None:
+        tree, meta = init_fn()
+        return tree, meta, 0
+    like, meta0 = init_fn()
+    tree, meta = load_checkpoint(ckpt_dir, r, like)
+    return tree, meta, r + 1

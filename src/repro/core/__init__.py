@@ -1,0 +1,26 @@
+"""FLTorrent core — the paper's contribution.
+
+Public API:
+
+* ``SwarmConfig`` / ``simulate_round`` — one privacy-hardened
+  dissemination round (spray -> warm-up -> BitTorrent -> deadline).
+* ``schedulers`` — RandomFIFO / RandomFastestFirst / GreedyFastestFirst /
+  distributed / flooding (+ max-flow stage upper bound).
+* ``privacy`` — Eq. (1)-(5) unlinkability bounds + empirical checks.
+* ``attacks`` — Sequential/Amount Greedy + Clustering, ASR metrics.
+* ``aggregation`` — FedAvg over the reconstructable active set.
+* ``chunking`` — update <-> chunks + torrent descriptors.
+* ``audit`` — commit-then-reveal tracker accountability.
+"""
+from . import (aggregation, attacks, audit, bittorrent, byzantine,
+               capacities, chunking, maxflow, overlay, privacy,
+               schedulers, simulator, state, types)
+from .simulator import RoundResult, RoundSimulator, simulate_round
+from .types import RoundMetrics, SwarmConfig
+
+__all__ = [
+    "SwarmConfig", "RoundMetrics", "RoundSimulator", "RoundResult",
+    "simulate_round", "aggregation", "attacks", "audit", "bittorrent",
+    "byzantine", "capacities", "chunking", "maxflow", "overlay",
+    "privacy", "schedulers", "simulator", "state", "types",
+]

@@ -1,0 +1,119 @@
+"""Commit-then-reveal tracker accountability (paper §III-D).
+
+Before seeing per-round inputs, the tracker commits to a seed hash
+``h^r = H(seed^r)``.  After the round it reveals the seed and a log of
+the overlay + warm-up directives.  Clients recompute the overlay from
+the seed and verify the *verifiable hard constraints*:
+
+  (i)   the revealed seed matches the commitment,
+  (ii)  the overlay equals the seed-derived overlay (adjacency),
+  (iii) every warm-up directive respects adjacency,
+  (iv)  per-stage capacity caps are not exceeded,
+  (v)   no redundant deliveries (a (receiver, chunk) pair scheduled
+        at most once) except logged retries.
+
+On any violation clients fail open to vanilla BitTorrent and void that
+round's unlinkability guarantee (§IV-A "conditionality").
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .overlay import random_overlay
+
+
+def _h(b: bytes) -> str:
+    return hashlib.sha256(b).hexdigest()
+
+
+@dataclass
+class TrackerCommitment:
+    round_id: int
+    commitment: str                     # H(seed)
+
+    @staticmethod
+    def commit(round_id: int, seed: int) -> "TrackerCommitment":
+        return TrackerCommitment(round_id, _h(f"{round_id}:{seed}".encode()))
+
+
+@dataclass
+class RoundLog:
+    """What an auditable tracker reveals post-round."""
+    round_id: int
+    seed: int
+    n: int
+    min_degree: int
+    extra_edge_frac: float
+    adjacency_digest: str
+    directives: list = field(default_factory=list)  # (slot, snd, rcv, chunk)
+    retries: set = field(default_factory=set)       # logged retry pairs
+
+    def digest(self) -> str:
+        body = json.dumps(
+            [self.round_id, self.seed, self.n, self.adjacency_digest,
+             len(self.directives)], sort_keys=True).encode()
+        return _h(body)
+
+
+def adjacency_digest(adj: np.ndarray) -> str:
+    return _h(np.packbits(adj).tobytes())
+
+
+@dataclass
+class AuditResult:
+    ok: bool
+    violations: list
+
+    @property
+    def fail_open(self) -> bool:
+        return not self.ok
+
+
+def verify_round(
+    commitment: TrackerCommitment,
+    log: RoundLog,
+    up_budget: np.ndarray,
+    down_budget: np.ndarray,
+) -> AuditResult:
+    """Client-side verification of the revealed round log (§III-D)."""
+    violations: list[str] = []
+
+    # (i) seed opens the commitment
+    if _h(f"{log.round_id}:{log.seed}".encode()) != commitment.commitment:
+        violations.append("seed does not match commitment")
+
+    # (ii) overlay is the seed-derived overlay
+    rng = np.random.default_rng(log.seed)
+    adj = random_overlay(log.n, log.min_degree, log.extra_edge_frac, rng)
+    if adjacency_digest(adj) != log.adjacency_digest:
+        violations.append("overlay does not match seed derivation")
+
+    # (iii)-(v) directive checks
+    per_stage_up: dict[tuple[int, int], int] = {}
+    per_stage_down: dict[tuple[int, int], int] = {}
+    delivered: set[tuple[int, int]] = set()
+    for (slot, snd, rcv, chunk) in log.directives:
+        if not adj[snd, rcv]:
+            violations.append(f"non-adjacent directive {snd}->{rcv}@{slot}")
+            break
+        ku = (slot, snd)
+        kv = (slot, rcv)
+        per_stage_up[ku] = per_stage_up.get(ku, 0) + 1
+        per_stage_down[kv] = per_stage_down.get(kv, 0) + 1
+        if per_stage_up[ku] > up_budget[snd]:
+            violations.append(f"uplink cap exceeded for {snd}@{slot}")
+            break
+        if per_stage_down[kv] > down_budget[rcv]:
+            violations.append(f"downlink cap exceeded for {rcv}@{slot}")
+            break
+        pair = (rcv, chunk)
+        if pair in delivered and pair not in log.retries:
+            violations.append(f"redundant delivery {pair}")
+            break
+        delivered.add(pair)
+
+    return AuditResult(ok=not violations, violations=violations)

@@ -1,0 +1,52 @@
+"""Access-link capacity models (paper §V-A, §V-E).
+
+The paper samples heterogeneous uplink/downlink capacities from European
+residential broadband statistics: uplink 15.5-25.3 Mbps and downlink
+36.5-121 Mbps, i.e. roughly [7, 12] and [18, 60] chunks/s for 256 KiB
+chunks.  LLM-scale stress tests instead use datacenter-class 7-10 Gbps
+links (§V-E).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+MBPS = 1e6 / 8.0          # bytes/s per Mbps
+GBPS = 1e9 / 8.0          # bytes/s per Gbps
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """Uniform ranges for per-client up/down capacities in bytes/s."""
+
+    up_lo: float
+    up_hi: float
+    down_lo: float
+    down_hi: float
+
+    def sample_chunks_per_slot(
+        self,
+        n: int,
+        chunk_bytes: int,
+        slot_seconds: float,
+        rng: np.random.Generator,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Per-client (uplink, downlink) budgets in chunks/slot (§II-B)."""
+        up = rng.uniform(self.up_lo, self.up_hi, size=n)
+        down = rng.uniform(self.down_lo, self.down_hi, size=n)
+        u = np.maximum(1, np.floor(up * slot_seconds / chunk_bytes)).astype(np.int64)
+        d = np.maximum(1, np.floor(down * slot_seconds / chunk_bytes)).astype(np.int64)
+        return u, d
+
+
+# Paper defaults -------------------------------------------------------
+RESIDENTIAL = LinkModel(
+    up_lo=15.5 * MBPS, up_hi=25.3 * MBPS,
+    down_lo=36.5 * MBPS, down_hi=121.0 * MBPS,
+)
+
+DATACENTER = LinkModel(      # LLM-scale stress tests (§V-E): 7-10 Gbps
+    up_lo=7.0 * GBPS, up_hi=10.0 * GBPS,
+    down_lo=7.0 * GBPS, down_hi=10.0 * GBPS,
+)

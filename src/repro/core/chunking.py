@@ -1,0 +1,125 @@
+"""Update chunking, torrent descriptors, and reassembly (paper §II-A/B).
+
+The data plane: a client's model update (a pytree of arrays) is
+serialized into a flat byte view, padded, and split into fixed-size
+chunks (BitTorrent pieces).  A *torrent descriptor* carries per-chunk
+hashes so receivers can verify integrity and discard corrupted payloads
+(BEP-0003).  Under homogeneous update sizes, descriptors reveal only
+chunk hashes and piece counts — not the owner identity (§II-B).
+
+The pack/unpack path is implemented in JAX (it is the on-device side of
+dissemination); hashing is host-side (it operates on wire bytes).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# Flatten / unflatten pytrees <-> single fp32 vector
+# ----------------------------------------------------------------------
+
+def flatten_update(tree) -> tuple[jnp.ndarray, list]:
+    """Flatten a pytree of arrays into one fp32 vector + shape spec."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    spec = [(l.shape, l.dtype) for l in leaves]
+    flat = jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves]) \
+        if leaves else jnp.zeros((0,), jnp.float32)
+    return flat, (treedef, spec)
+
+
+def unflatten_update(flat: jnp.ndarray, spec) -> "jax.Array":
+    treedef, shapes = spec
+    leaves = []
+    off = 0
+    for shape, dtype in shapes:
+        size = int(np.prod(shape)) if shape else 1
+        leaves.append(flat[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+# ----------------------------------------------------------------------
+# Chunk pack / unpack (JAX data plane)
+# ----------------------------------------------------------------------
+
+def chunk_count(num_bytes: int, chunk_bytes: int) -> int:
+    """K_v^r = ceil(S_v^r / C)  (paper §II-B)."""
+    return int(-(-num_bytes // chunk_bytes))
+
+
+def pack_chunks(flat: jnp.ndarray, chunk_bytes: int) -> jnp.ndarray:
+    """(num_elems,) fp32 -> (K, C/4) fp32 chunk matrix with zero padding."""
+    elems_per_chunk = chunk_bytes // 4
+    n = flat.shape[0]
+    k = chunk_count(n * 4, chunk_bytes)
+    pad = k * elems_per_chunk - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(k, elems_per_chunk)
+
+
+def unpack_chunks(chunks: jnp.ndarray, num_elems: int) -> jnp.ndarray:
+    """(K, C/4) chunk matrix -> (num_elems,) fp32 vector."""
+    return chunks.reshape(-1)[:num_elems]
+
+
+# ----------------------------------------------------------------------
+# Torrent descriptors (host-side integrity metadata)
+# ----------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TorrentDescriptor:
+    """Metadata published per update: chunk hashes + aggregation weight.
+
+    ``desc_id`` is the public identity of the update in a round (attacks
+    see desc ids, never owner indices).  ``weight`` is the FedAvg scalar
+    (e.g. local sample count, §II-B).
+    """
+
+    desc_id: str
+    num_chunks: int
+    chunk_bytes: int
+    total_bytes: int
+    weight: float
+    chunk_hashes: tuple = field(default_factory=tuple)
+
+    @staticmethod
+    def build(chunks: np.ndarray, weight: float, salt: bytes = b"") -> "TorrentDescriptor":
+        arr = np.ascontiguousarray(np.asarray(chunks, dtype=np.float32))
+        hashes = tuple(
+            hashlib.sha256(arr[i].tobytes()).hexdigest() for i in range(arr.shape[0])
+        )
+        root = hashlib.sha256(("".join(hashes)).encode() + salt).hexdigest()[:16]
+        return TorrentDescriptor(
+            desc_id=root,
+            num_chunks=arr.shape[0],
+            chunk_bytes=arr.shape[1] * 4,
+            total_bytes=arr.size * 4,
+            weight=float(weight),
+            chunk_hashes=hashes,
+        )
+
+    def verify_chunk(self, index: int, payload: np.ndarray) -> bool:
+        """Hash-check one received piece (Byzantine integrity, §III-E)."""
+        h = hashlib.sha256(
+            np.ascontiguousarray(np.asarray(payload, np.float32)).tobytes()
+        ).hexdigest()
+        return h == self.chunk_hashes[index]
+
+
+def make_update_torrent(tree, weight: float, chunk_bytes: int):
+    """Convenience: pytree -> (chunks, descriptor, spec) for one client."""
+    flat, spec = flatten_update(tree)
+    chunks = pack_chunks(flat, chunk_bytes)
+    desc = TorrentDescriptor.build(np.asarray(chunks), weight)
+    return chunks, desc, (spec, flat.shape[0])
+
+
+def reassemble_update(chunks: jnp.ndarray, spec_and_len):
+    spec, num_elems = spec_and_len
+    return unflatten_update(unpack_chunks(chunks, num_elems), spec)

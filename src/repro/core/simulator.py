@@ -1,0 +1,217 @@
+"""Round simulator: spray -> warm-up -> BitTorrent -> deadline (§III-A).
+
+Orchestrates one FLTorrent round end to end and produces the metrics the
+paper reports (T_warm, T_round, utilization, warm-up share) plus the
+transfer log consumed by the attack suite (§IV-C) and the empirical
+privacy-bound checks (§IV-A).
+
+Fault model (§III-E): ``dropouts`` maps slot -> list of clients that
+disconnect at that slot.  Dropped clients are excluded from all further
+scheduling (tracker behaviour); chunks they uniquely held may leave some
+updates unreconstructable, in which case aggregation proceeds over the
+reconstructable active set — standard partial-participation semantics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from . import capacities as cap
+from .bittorrent import bt_exact_slot, run_bt_fluid
+from .byzantine import ByzantineModel, claimed_inventory, filter_transfers
+from .maxflow import stage_upper_bound
+from .overlay import random_overlay
+from .schedulers import run_scheduler
+from .state import SwarmState
+from .types import RoundMetrics, SwarmConfig
+
+
+@dataclass
+class RoundResult:
+    metrics: RoundMetrics
+    log: dict                      # finalized transfer log (struct of arrays)
+    reconstructable: np.ndarray    # (n, n) bool: A_v^r membership
+    active: np.ndarray             # (n,) bool at deadline
+    adj: np.ndarray
+    up: np.ndarray
+    down: np.ndarray
+    maxflow_ub: Optional[np.ndarray] = None   # per warm-up slot
+    warmup_sent_per_slot: Optional[np.ndarray] = None
+    fluid_bt: bool = False
+    tracker_log: Optional[dict] = None
+
+
+class RoundSimulator:
+    """One FL round of FLTorrent dissemination."""
+
+    def __init__(
+        self,
+        cfg: SwarmConfig,
+        link_model: cap.LinkModel = cap.RESIDENTIAL,
+        dropouts: dict[int, list[int]] | None = None,
+        byzantine: ByzantineModel | None = None,
+        bt_mode: str = "auto",          # "exact" | "fluid" | "auto"
+        exact_limit: int = 4_000_000,   # n * total_chunks budget for exact
+    ):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.adj = random_overlay(cfg.n, cfg.min_degree, cfg.extra_edge_frac,
+                                  self.rng)
+        self.up, self.down = link_model.sample_chunks_per_slot(
+            cfg.n, cfg.chunk_bytes, cfg.slot_seconds, self.rng)
+        self.dropouts = dropouts or {}
+        if bt_mode == "auto":
+            bt_mode = ("exact" if cfg.n * cfg.total_chunks <= exact_limit
+                       else "fluid")
+        self.bt_mode = bt_mode
+        self.byz = byzantine
+        self._fail_run = np.zeros(cfg.n, dtype=np.int64)
+        self.state = SwarmState(cfg, self.adj, self.up, self.down, self.rng)
+
+    # ------------------------------------------------------------------
+    def _spray(self):
+        """Pre-round obfuscation (§III-B.1): sigma chunks per source to
+        random non-neighbors over ephemeral tracker-coordinated tunnels.
+        Happens before slot 0 and is not attributed to round pseudonyms
+        (tunnels are torn down; attacks read phase==1 only)."""
+        cfg = self.cfg
+        st = self.state
+        sigma = cfg.spray_copies
+        if sigma == 0:
+            return
+        K = cfg.chunks_per_update
+        snd, rcv, chk = [], [], []
+        for v in range(cfg.n):
+            non_nbrs = np.flatnonzero(~self.adj[v])
+            non_nbrs = non_nbrs[non_nbrs != v]
+            if non_nbrs.size == 0:
+                continue
+            ids = self.rng.choice(K, size=min(sigma, K), replace=False)
+            tgts = self.rng.choice(non_nbrs, size=len(ids), replace=True)
+            snd.append(np.full(len(ids), v, dtype=np.int64))
+            rcv.append(tgts.astype(np.int64))
+            chk.append(v * K + ids)
+        if not snd:
+            return    # complete overlay: no non-neighbors to spray to
+        st.apply_transfers(np.concatenate(snd), np.concatenate(rcv),
+                           np.concatenate(chk), phase_code=0)
+        st.per_slot_sent.pop()  # spray does not consume round slots
+
+    # ------------------------------------------------------------------
+    def _schedule_filtered(self, scheduler_fn):
+        """Run a slot scheduler against CLAIMED bitfields, then apply
+        Byzantine behaviour + per-peer progress timeouts (SIII-E)."""
+        st = self.state
+        if self.byz is None:
+            return scheduler_fn()
+        real = st.have
+        st.have = claimed_inventory(self.byz, st, self.rng)
+        try:
+            snd, rcv, chk = scheduler_fn()
+        finally:
+            st.have = real
+        ok, fails = filter_transfers(self.byz, st, self.rng,
+                                     snd, rcv, chk)
+        served = np.zeros(self.cfg.n, dtype=bool)
+        if len(snd):
+            served[np.unique(np.asarray(snd)[ok])] = True
+        self._fail_run = np.where(served, 0,
+                                  self._fail_run + (fails > 0))
+        timed_out = self._fail_run >= self.byz.timeout_slots
+        if timed_out.any():
+            st.active[timed_out] = False   # excluded from scheduling
+        return (np.asarray(snd)[ok], np.asarray(rcv)[ok],
+                np.asarray(chk)[ok])
+
+    # ------------------------------------------------------------------
+    def _apply_dropouts(self):
+        for v in self.dropouts.get(self.state.slot, []):
+            self.state.active[v] = False
+
+    # ------------------------------------------------------------------
+    def run(self, collect_maxflow: bool = False) -> RoundResult:
+        cfg = self.cfg
+        st = self.state
+        if cfg.enable_preround:
+            self._spray()
+
+        ubs: list[int] = []
+        # ---- warm-up (§III-B) ----
+        flood_state: dict = {}
+        while not st.warmup_done() and st.slot < cfg.s_max:
+            self._apply_dropouts()
+            if collect_maxflow:
+                ubs.append(stage_upper_bound(st))
+            snd, rcv, chk = self._schedule_filtered(
+                lambda: run_scheduler(st, flood_state))
+            st.apply_transfers(snd, rcv, chk, phase_code=1)
+            st.slot += 1
+        t_warm = st.slot
+        failed_open = not st.warmup_done()
+
+        warm_sent_arr = np.asarray(st.per_slot_sent, dtype=np.int64)
+
+        # ---- vanilla BitTorrent (§III-A step 4) ----
+        st.phase = "bt"
+        fluid = self.bt_mode == "fluid"
+        if fluid:
+            run_bt_fluid(st, cfg.s_max - st.slot)
+        else:
+            idle = 0
+            while not st.all_done() and st.slot < cfg.s_max:
+                self._apply_dropouts()
+                snd, rcv, chk = self._schedule_filtered(
+                    lambda: bt_exact_slot(st))
+                st.apply_transfers(snd, rcv, chk, phase_code=2)
+                st.slot += 1
+                idle = idle + 1 if len(snd) == 0 else 0
+                if idle >= 3:
+                    # No transfer possible for several slots (e.g. sole
+                    # holders dropped): the round completes over the
+                    # remaining reconstructable set (§III-E).
+                    break
+        t_round = st.slot
+
+        # ---- metrics ----
+        total_up = float(self.up.sum())
+        m = RoundMetrics(
+            t_warm=t_warm,
+            t_round=t_round,
+            warmup_chunks_sent=st.warmup_sent,
+            bt_chunks_sent=st.bt_sent,
+            warmup_utilization=(st.warmup_sent / (t_warm * total_up))
+            if t_warm else 0.0,
+            overall_utilization=((st.warmup_sent + st.bt_sent)
+                                 / (t_round * total_up)) if t_round else 0.0,
+            warmup_share=(t_warm / t_round) if t_round else 0.0,
+            failed_open=failed_open,
+            per_slot_warmup_util=(warm_sent_arr / total_up) if t_warm else None,
+            active_at_deadline=st.active.copy(),
+        )
+
+        # ---- reconstructable sets (aggregation semantics §II-B) ----
+        if fluid:
+            # Fluid BT runs to completion: all updates reconstructable by
+            # every active client (count-space equivalence).
+            recon = np.tile(st.active[None, :], (cfg.n, 1))
+            recon &= st.active[:, None]
+        else:
+            recon = st.reconstructable_sets()
+            recon &= st.active[:, None]
+
+        log = st.log.finalize(cfg.chunks_per_update)
+        return RoundResult(
+            metrics=m, log=log, reconstructable=recon,
+            active=st.active.copy(), adj=self.adj, up=self.up,
+            down=self.down,
+            maxflow_ub=np.asarray(ubs, dtype=np.int64) if collect_maxflow else None,
+            warmup_sent_per_slot=warm_sent_arr,
+            fluid_bt=fluid,
+        )
+
+
+def simulate_round(cfg: SwarmConfig, collect_maxflow: bool = False,
+                   **kw) -> RoundResult:
+    return RoundSimulator(cfg, **kw).run(collect_maxflow=collect_maxflow)

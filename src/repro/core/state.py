@@ -1,0 +1,218 @@
+"""Mutable swarm state for one FLTorrent round (paper §II-B, §IV-A).
+
+Holds the per-client chunk inventories, link budgets, activity masks and
+the transfer event log.  Encodes the two warm-up enforcement knobs from
+§IV-A exactly:
+
+* **cover-set gating** — an honest sender's owner chunks become eligible
+  for upload only once its eligible buffer would reach ``k_gate``
+  (equivalently: non-owner mass ``X_u >= k_gate - kappa``), and
+* **owner throttling** — at any instant at most ``kappa`` owner chunks
+  are eligible (``O_u <= kappa_u``), rotated over slots so every owner
+  chunk can eventually circulate.
+
+With both in force, every warm-up transfer from an honest sender has
+per-transfer attribution posterior ``O_u / B_u <= kappa / k_gate``
+(Eq. 1) — asserted empirically in tests/test_privacy_bounds.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .types import SwarmConfig
+
+
+@dataclass
+class TransferLog:
+    """Struct-of-arrays event log; grown per-slot, finalized once."""
+
+    slots: list = field(default_factory=list)
+    senders: list = field(default_factory=list)
+    receivers: list = field(default_factory=list)
+    chunks: list = field(default_factory=list)
+    b_sizes: list = field(default_factory=list)   # B_u at send time
+    o_sizes: list = field(default_factory=list)   # O_u at send time
+    phases: list = field(default_factory=list)    # 0=spray 1=warmup 2=bt
+
+    def append(self, slot, snd, rcv, chk, b, o, phase):
+        if len(snd) == 0:
+            return
+        self.slots.append(np.full(len(snd), slot, dtype=np.int32))
+        self.senders.append(np.asarray(snd, dtype=np.int32))
+        self.receivers.append(np.asarray(rcv, dtype=np.int32))
+        self.chunks.append(np.asarray(chk, dtype=np.int64))
+        self.b_sizes.append(np.asarray(b, dtype=np.int64))
+        self.o_sizes.append(np.asarray(o, dtype=np.int64))
+        self.phases.append(np.full(len(snd), phase, dtype=np.int8))
+
+    def finalize(self, chunks_per_update: int) -> dict:
+        if not self.slots:
+            empty = np.zeros(0, dtype=np.int64)
+            return {k: empty for k in
+                    ("slot", "sender", "receiver", "chunk", "owner",
+                     "b_size", "o_size", "phase")}
+        out = {
+            "slot": np.concatenate(self.slots),
+            "sender": np.concatenate(self.senders),
+            "receiver": np.concatenate(self.receivers),
+            "chunk": np.concatenate(self.chunks),
+            "b_size": np.concatenate(self.b_sizes),
+            "o_size": np.concatenate(self.o_sizes),
+            "phase": np.concatenate(self.phases),
+        }
+        out["owner"] = out["chunk"] // chunks_per_update
+        return out
+
+
+class SwarmState:
+    """Vectorized round state: inventories, budgets, eligibility."""
+
+    def __init__(self, cfg: SwarmConfig, adj: np.ndarray,
+                 up: np.ndarray, down: np.ndarray,
+                 rng: np.random.Generator):
+        n, K = cfg.n, cfg.chunks_per_update
+        self.cfg = cfg
+        self.adj = adj
+        self.up = up.astype(np.int64)
+        self.down = down.astype(np.int64)
+        self.rng = rng
+
+        C = cfg.total_chunks
+        self.have = np.zeros((n, C), dtype=bool)
+        for v in range(n):
+            self.have[v, v * K:(v + 1) * K] = True
+        # Per-chunk replication count (rarity), maintained incrementally.
+        self.replicas = np.ones(C, dtype=np.int64)
+        # Non-owner chunks held per client (X_u in §IV-A).
+        self.nonowner = np.zeros(n, dtype=np.int64)
+        # Total chunks held per client, maintained incrementally.
+        self.hold = np.full(n, K, dtype=np.int64)
+
+        self.active = np.ones(n, dtype=bool)
+        if cfg.enable_timelag and cfg.lag_slots > 1:
+            self.lag = rng.integers(0, cfg.lag_slots, size=n)
+        else:
+            self.lag = np.zeros(n, dtype=np.int64)
+
+        self.slot = 0
+        self.phase = "warmup"
+        self.any_nonowner = False      # swarm-wide non-owner mass exists
+        self.log = TransferLog()
+        self.warmup_sent = 0
+        self.bt_sent = 0
+        self.per_slot_sent: list[int] = []
+        self.owners = np.arange(C, dtype=np.int64) // K
+
+    # -- activity ------------------------------------------------------
+    def senders_active(self) -> np.ndarray:
+        """Clients allowed to *initiate* transmissions this slot (lags)."""
+        return self.active & (self.lag <= self.slot)
+
+    # -- eligibility (paper §IV-A) --------------------------------------
+    def eligible_owner_slice(self, u: int) -> np.ndarray:
+        """Global chunk ids of u's currently eligible owner chunks.
+
+        Cover-set gating (§IV-A): owner chunks unlock once the eligible
+        buffer reaches ``k_gate``.  Bootstrap exception: when the swarm
+        holds zero non-owner mass anywhere (K-only ablation, no spray),
+        the throttled window is permitted — someone must seed the first
+        copies, exactly the owner-revealing sends pre-round obfuscation
+        exists to remove (Fig. 4/6).
+        """
+        cfg = self.cfg
+        K = cfg.chunks_per_update
+        if self.phase == "bt" or not cfg.enable_gating:
+            return np.arange(u * K, (u + 1) * K)
+        kappa = cfg.owner_throttle
+        if self.nonowner[u] + kappa < cfg.k_gate and self.any_nonowner:
+            return np.zeros(0, dtype=np.int64)  # gated: buffer too small
+        # Per-sender de-synchronized rotation: a shared phase would make
+        # every sender expose the SAME chunk index each slot, destroying
+        # early chunk diversity (visible as a longer BT phase in Fig. 4).
+        start = (self.slot * kappa + (u * 2654435761) % K) % K
+        idx = (start + np.arange(kappa)) % K
+        return u * K + idx
+
+    def eligible_row(self, u: int) -> np.ndarray:
+        """Bool mask over all chunks that u may serve right now."""
+        row = self.have[u].copy()
+        K = self.cfg.chunks_per_update
+        if self.phase != "bt" and self.cfg.enable_gating:
+            row[u * K:(u + 1) * K] = False
+            row[self.eligible_owner_slice(u)] = True
+        return row
+
+    def buffer_stats(self, u: int) -> tuple[int, int]:
+        """(B_u, O_u): eligible buffer size and eligible owner count."""
+        K = self.cfg.chunks_per_update
+        if self.phase == "bt" or not self.cfg.enable_gating:
+            return int(self.have[u].sum()), K
+        o = len(self.eligible_owner_slice(u))
+        return int(self.nonowner[u]) + o, o
+
+    # -- transfer application -------------------------------------------
+    def apply_transfers(self, snd: np.ndarray, rcv: np.ndarray,
+                        chk: np.ndarray, phase_code: int):
+        """Mark chunks delivered; update rarity, X_u and the event log."""
+        if len(snd) == 0:
+            self.per_slot_sent.append(0)
+            return
+        snd = np.asarray(snd)
+        rcv = np.asarray(rcv)
+        chk = np.asarray(chk)
+        # De-dup (receiver, chunk) within the slot (schedulers should
+        # already avoid this, but enforce delivery-exactly-once).
+        order = np.lexsort((chk, rcv))
+        snd, rcv, chk = snd[order], rcv[order], chk[order]
+        keep = np.ones(len(snd), dtype=bool)
+        keep[1:] = ~((rcv[1:] == rcv[:-1]) & (chk[1:] == chk[:-1]))
+        already = self.have[rcv, chk]
+        keep &= ~already
+        snd, rcv, chk = snd[keep], rcv[keep], chk[keep]
+
+        b = np.empty(len(snd), dtype=np.int64)
+        o = np.empty(len(snd), dtype=np.int64)
+        if len(snd):
+            uniq = np.unique(snd)
+            bs = {int(u): self.buffer_stats(int(u)) for u in uniq}
+            for i, u in enumerate(snd):
+                b[i], o[i] = bs[int(u)]
+
+        self.have[rcv, chk] = True
+        np.add.at(self.replicas, chk, 1)
+        np.add.at(self.hold, rcv, 1)
+        owner_mask = self.owners[chk] != rcv
+        np.add.at(self.nonowner, rcv[owner_mask], 1)
+        if owner_mask.any():
+            self.any_nonowner = True
+
+        self.log.append(self.slot, snd, rcv, chk, b, o, phase_code)
+        cnt = len(snd)
+        self.per_slot_sent.append(cnt)
+        if phase_code == 1:
+            self.warmup_sent += cnt
+        elif phase_code == 2:
+            self.bt_sent += cnt
+
+    # -- progress queries -------------------------------------------------
+    def holdings(self) -> np.ndarray:
+        return self.hold.copy()
+
+    def warmup_done(self) -> bool:
+        """s_BT condition: every *active* client holds >= k_term chunks."""
+        if not self.active.any():
+            return True
+        return bool((self.hold[self.active] >= self.cfg.k_term).all())
+
+    def all_done(self) -> bool:
+        if not self.active.any():
+            return True
+        return bool((self.hold[self.active] >= self.cfg.total_chunks).all())
+
+    def reconstructable_sets(self) -> np.ndarray:
+        """A_v^r as a bool matrix (n_clients, n_updates) at current slot."""
+        n, K = self.cfg.n, self.cfg.chunks_per_update
+        per_update = self.have.reshape(n, n, K)
+        return per_update.all(axis=2)

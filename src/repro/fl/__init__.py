@@ -1,0 +1,1 @@
+from . import baselines, client, models_small, runner

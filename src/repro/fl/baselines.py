@@ -1,0 +1,55 @@
+"""Learning baselines the paper compares against (§V-B).
+
+* **CFL** — centralized federated learning: a server FedAvgs all client
+  updates each round (pragmatic upper bound).
+* **GossipDFL** — representative mix-and-forward decentralized learning:
+  each round, every client averages parameters with its overlay
+  neighbors through a Metropolis-Hastings mixing matrix (doubly
+  stochastic), the standard gossip step of [Lian et al. 2017; Koloskova
+  et al. 2019].  Under heterogeneity this *attenuates* global
+  information (partial mixing), which is precisely the failure mode
+  FLTorrent avoids by disseminating full updates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def fedavg_server(updates: list, weights: np.ndarray):
+    """CFL aggregation over all clients."""
+    w = np.asarray(weights, np.float64)
+    wn = (w / w.sum()).astype(np.float32)
+
+    def combine(*leaves):
+        return jnp.einsum("n,n...->...",
+                          jnp.asarray(wn), jnp.stack(leaves))
+
+    return jax.tree_util.tree_map(combine, *updates)
+
+
+def metropolis_weights(adj: np.ndarray) -> np.ndarray:
+    """Doubly-stochastic mixing matrix over the overlay."""
+    n = adj.shape[0]
+    deg = adj.sum(1)
+    w = np.zeros((n, n), np.float64)
+    for i in range(n):
+        for j in np.flatnonzero(adj[i]):
+            w[i, j] = 1.0 / (1 + max(deg[i], deg[j]))
+        w[i, i] = 1.0 - w[i].sum()
+    return w
+
+
+def gossip_mix(client_params: list, w: np.ndarray):
+    """One gossip round: x_i <- sum_j W_ij x_j (mix-and-forward)."""
+    wj = jnp.asarray(w, jnp.float32)
+
+    def combine(*leaves):
+        stacked = jnp.stack(leaves)              # (n, ...)
+        return jnp.einsum("ij,j...->i...", wj, stacked)
+
+    mixed = jax.tree_util.tree_map(combine, *client_params)
+    # Unstack back into per-client pytrees.
+    n = w.shape[0]
+    return [jax.tree_util.tree_map(lambda l: l[i], mixed) for i in range(n)]

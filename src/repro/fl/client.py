@@ -1,0 +1,65 @@
+"""FL client: local SGD training producing a model update (paper §III-A.1).
+
+Each round, client v computes ``g_v^r = params_local_after - params_in``
+(the update that gets chunked and disseminated) with weight = local
+sample count, matching FedAvg semantics.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .models_small import cross_entropy
+
+
+@dataclass
+class LocalSpec:
+    epochs: int = 5
+    batch_size: int = 32
+    lr: float = 0.05
+    momentum: float = 0.9
+
+
+def make_local_train(apply_fn, spec: LocalSpec):
+    """Returns jit'd (params, x, y, rng) -> new_params local trainer."""
+
+    def loss_fn(params, xb, yb):
+        return cross_entropy(apply_fn(params, xb), yb)
+
+    @jax.jit
+    def sgd_step(params, mom, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb)
+        mom = jax.tree_util.tree_map(
+            lambda m, g: spec.momentum * m + g, mom, grads)
+        params = jax.tree_util.tree_map(
+            lambda p, m: p - spec.lr * m, params, mom)
+        return params, mom, loss
+
+    def local_train(params, x: np.ndarray, y: np.ndarray,
+                    rng: np.random.Generator):
+        mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+        n = len(y)
+        for _ in range(spec.epochs):
+            order = rng.permutation(n)
+            for i in range(0, n, spec.batch_size):
+                sl = order[i:i + spec.batch_size]
+                if len(sl) < 2:
+                    continue
+                params, mom, _ = sgd_step(params, mom,
+                                          jnp.asarray(x[sl]),
+                                          jnp.asarray(y[sl]))
+        return params
+
+    return local_train
+
+
+def compute_update(params_in, params_out):
+    """g_v^r: the disseminated artifact (delta, FedAvg-compatible)."""
+    return jax.tree_util.tree_map(lambda a, b: b - a, params_in, params_out)
+
+
+def apply_aggregate(params_in, agg_update):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params_in, agg_update)

@@ -1,0 +1,84 @@
+"""Small pure-JAX models for the FL learning-utility experiments.
+
+The paper trains GoogLeNet-scale CNNs on MNIST/CIFAR-10; for the
+synthetic stand-ins a compact CNN and MLP suffice to reproduce the
+*comparison* (CFL vs GossipDFL vs FLTorrent) — the dissemination layer
+is model-agnostic by construction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dense_init(rng, fan_in, fan_out):
+    k1, rng = jax.random.split(rng)
+    w = jax.random.normal(k1, (fan_in, fan_out)) * np.sqrt(2.0 / fan_in)
+    return {"w": w.astype(jnp.float32),
+            "b": jnp.zeros((fan_out,), jnp.float32)}, rng
+
+
+def init_cnn(rng, input_shape, num_classes: int):
+    """3-block CNN: conv3x3(32) - conv3x3(64) - pool - dense."""
+    h, w, c = input_shape
+    params = {}
+    k1, k2, rng = jax.random.split(rng, 3)
+    params["conv1"] = {
+        "w": (jax.random.normal(k1, (3, 3, c, 32)) * np.sqrt(2 / (9 * c))
+              ).astype(jnp.float32),
+        "b": jnp.zeros((32,), jnp.float32)}
+    params["conv2"] = {
+        "w": (jax.random.normal(k2, (3, 3, 32, 64)) * np.sqrt(2 / (9 * 32))
+              ).astype(jnp.float32),
+        "b": jnp.zeros((64,), jnp.float32)}
+    flat = (h // 4) * (w // 4) * 64
+    params["fc1"], rng = _dense_init(rng, flat, 128)
+    params["fc2"], rng = _dense_init(rng, 128, num_classes)
+    return params
+
+
+def cnn_apply(params, x):
+    def conv(p, x, stride):
+        y = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(stride, stride), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return jax.nn.relu(y + p["b"])
+
+    x = conv(params["conv1"], x, 2)
+    x = conv(params["conv2"], x, 2)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def init_mlp(rng, input_shape, num_classes: int):
+    d = int(np.prod(input_shape))
+    params = {}
+    params["fc1"], rng = _dense_init(rng, d, 256)
+    params["fc2"], rng = _dense_init(rng, 256, 128)
+    params["fc3"], rng = _dense_init(rng, 128, num_classes)
+    return params
+
+
+def mlp_apply(params, x):
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    x = jax.nn.relu(x @ params["fc2"]["w"] + params["fc2"]["b"])
+    return x @ params["fc3"]["w"] + params["fc3"]["b"]
+
+
+MODELS = {"cnn": (init_cnn, cnn_apply), "mlp": (init_mlp, mlp_apply)}
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(apply_fn, params, x, y, batch: int = 512) -> float:
+    correct = 0
+    for i in range(0, len(y), batch):
+        logits = apply_fn(params, jnp.asarray(x[i:i + batch]))
+        correct += int((jnp.argmax(logits, -1) == jnp.asarray(y[i:i + batch])).sum())
+    return correct / len(y)

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the compute hot spots + jit'd dispatch (ops).
+
+Kernels (each <name>.py = pl.pallas_call + BlockSpec; ref.py = oracle):
+
+* ``attention``  — flash attention: causal / sliding-window / logit
+                   softcap / GQA (every attention arch's hot spot).
+* ``rglru``      — RG-LRU diagonal gated linear recurrence
+                   (recurrentgemma's hot loop at long context).
+* ``fedavg``     — masked FedAvg reduction over stacked client updates
+                   (the paper's aggregation step, §II-B).
+* ``quantize``   — per-256KiB-chunk int8 quant/dequant (dissemination
+                   compression hook).
+* ``mlstm``      — fused chunkwise-parallel mLSTM: the matrix state
+                   lives in VMEM scratch across the chunk loop
+                   (production form of the §Perf cell-1 fix).
+"""
+from . import attention, fedavg, mlstm, ops, quantize, ref, rglru
+
+__all__ = ["attention", "fedavg", "mlstm", "ops", "quantize", "ref",
+           "rglru"]

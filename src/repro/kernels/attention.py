@@ -1,0 +1,160 @@
+"""Pallas TPU flash attention (causal / sliding-window / softcap / GQA).
+
+TPU-native blocking: grid = (batch, q_heads, num_q_blocks, num_kv_blocks)
+with the kv-block axis innermost, so the f32 accumulator / running max /
+running denominator live in VMEM scratch across kv iterations (the
+standard TPU online-softmax pattern).  Block shapes are (block_q, d) for
+Q and (block_k, d) for K/V — d is the full head dim (MXU-aligned, 128 or
+256 for the assigned archs), so VMEM per step is
+``(block_q + 2*block_k) * d * bytes + block_q * d * 4`` — e.g. ~590 KiB
+at block_q=block_k=512, d=128, bf16 inputs, far below the ~16 MiB VMEM
+budget, leaving room for double buffering.
+
+Fully-masked (q-block, kv-block) tiles are skipped via ``pl.when`` —
+with causal masking this halves compute; with sliding windows it reduces
+the kv loop to O(window) per q block, which is what makes 32k-sequence
+local-attention layers cheap.
+
+GQA is handled in the BlockSpec index maps: the kv head index is
+``q_head // group`` — no repeat/materialization of K/V.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  softcap: Optional[float], block_q: int, block_k: int,
+                  q_offset: int, kv_offset: int, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # --- static-shape block skip test (trace-time ints are fine; the
+    # dynamic grid indices make this a traced predicate for pl.when) ---
+    q_lo = q_offset + qi * block_q          # first absolute q position
+    q_hi = q_lo + block_q - 1               # last absolute q position
+    k_lo = kv_offset + ki * block_k         # first absolute k position
+    k_hi = k_lo + block_k - 1
+    live = (ki * block_k) <= (kv_len - 1)   # physical padding bound
+    live &= k_hi >= 0                       # rolling-cache validity
+    if causal:
+        live &= k_lo <= q_hi
+    if window is not None:
+        live &= k_hi > q_lo - window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (block_q, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (block_k, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (block_k, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+
+        q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 0)
+        k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32,
+                                                (block_q, block_k), 1)
+        phys = (ki * block_k) + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = (phys < kv_len) & (k_pos >= 0)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                          # (block_q,)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)              # <= 1, no overflow
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)                  # kill NEG_INF rows
+        l_scr[...] = alpha * l_scr[...] + p.sum(axis=1)
+        acc_scr[...] = (acc_scr[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[...]
+        l_safe = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None, q_offset: int = 0,
+                    kv_offset: int = 0,
+                    scale: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D); returns (B, Hq, Tq, D)."""
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    # Pad sequence dims up to block multiples (masked out via kv_len).
+    pad_q = (-tq) % block_q
+    pad_k = (-tk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = q.shape[2] // block_q
+    nk = k.shape[2] // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=(d ** -0.5) if scale is None else scale,
+        causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, q_offset=q_offset,
+        kv_offset=kv_offset, kv_len=tk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b_, h, qi, ki: (b_, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b_, h, qi, ki, g=group: (b_, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b_, h, qi, ki: (b_, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # running max m_i
+            pltpu.VMEM((block_q,), jnp.float32),   # running denom l_i
+            pltpu.VMEM((block_q, d), jnp.float32),  # f32 accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pad_q:
+        out = out[:, :, :tq]
+    return out

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: chunkwise-parallel mLSTM (xLSTM matrix memory).
+
+This is the fused production form of ``models.layers._mlstm_chunkwise``
+(§Perf cell-1): the (dh, dh) matrix state C, the normalizer n and the
+stabilizer m live in VMEM scratch across the chunk loop, so the state
+NEVER round-trips HBM between chunks — the XLA path still pays one
+carry read+write per chunk, and per-chunk layout collectives under
+SPMD; the kernel removes both by construction.
+
+Blocking: grid = (B, H, T/L) with the chunk axis innermost (sequential
+on TPU, so scratch carries persist).  Per-step working set at
+L=128, dh=512, f32: 4 slabs (q,k,v,h) ~1 MiB + (L,L) gate/score tiles
+~130 KiB + C scratch 1 MiB — comfortably inside VMEM.
+
+In-kernel math (identical to the derivation in layers.py, one (b,h)):
+    A = tril_ones @ f          (cumsum as an MXU matmul)
+    g = rowmax(tril ? gia : -inf)       (cummax as a masked row-max)
+    M = max(m0, g);   c_int = exp(m0 - M)
+    W[j,s] = tril ? exp(gia_s - M_j) : 0
+    h = c_int * (q @ C0^T) + (W * (q k^T)) @ v, normalized by
+        max(|c_int*(n0.q) + (W @ k).q|, 1)
+    C <- exp(m0-MxL) C0 + (wL*v)^T k;   n, m likewise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref,
+                  h_ref, cT_ref, nT_ref, mT_ref,
+                  c_scr, n_scr, m_scr, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, -1e30)
+
+    qh = q_ref[0, 0].astype(jnp.float32)          # (L, dh)
+    kh = k_ref[0, 0].astype(jnp.float32)
+    vh = v_ref[0, 0].astype(jnp.float32)
+    ic = i_ref[0, 0].astype(jnp.float32)          # (L,)
+    fc = f_ref[0, 0].astype(jnp.float32)
+
+    L = chunk
+    tril = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    ones_tri = tril.astype(jnp.float32)
+    A = jax.lax.dot_general(ones_tri, fc[:, None],
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)[:, 0]
+    gia = ic - A                                   # i_s - A_s
+    g = jnp.max(jnp.where(tril, gia[None, :], -1e30), axis=1)
+
+    m0 = m_scr[0]
+    C0 = c_scr[...]
+    n0 = n_scr[...]
+    M = jnp.maximum(m0, g)                         # (L,)
+    c_int = jnp.exp(m0 - M)
+    W = jnp.where(tril, jnp.exp(gia[None, :] - M[:, None]), 0.0)
+
+    scores = jax.lax.dot_general(qh, kh, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    inter = jax.lax.dot_general(qh, C0, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    h_num = (c_int[:, None] * inter
+             + jax.lax.dot_general(W * scores, vh,
+                                   (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    nj = (c_int[:, None] * n0[None, :]
+          + jax.lax.dot_general(W, kh, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32))
+    den = jnp.abs(jnp.sum(nj * qh, axis=1))
+    h_ref[0, 0] = (h_num / jnp.maximum(den, 1.0)[:, None]
+                   ).astype(h_ref.dtype)
+
+    # end-of-chunk state
+    MxL = jnp.maximum(m0, g[L - 1])
+    wL = jnp.exp(gia - MxL)                        # (L,)
+    decay = jnp.exp(m0 - MxL)
+    c_scr[...] = (decay * C0
+                  + jax.lax.dot_general(vh * wL[:, None], kh,
+                                        (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+    n_scr[...] = decay * n0 + jnp.sum(kh * wL[:, None], axis=0)
+    m_scr[0] = A[L - 1] + MxL
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        cT_ref[0, 0] = c_scr[...].astype(cT_ref.dtype)
+        nT_ref[0, 0] = n_scr[...].astype(nT_ref.dtype)
+        mT_ref[0, 0] = jnp.broadcast_to(m_scr[...], mT_ref.shape[2:])
+
+
+def mlstm_chunkwise(q, k, v, i_pre, f_pre, *, chunk: int = 128,
+                    interpret: bool = False):
+    """q,k,v: (B, H, T, dh) (q,k pre-scaled); i_pre,f_pre: (B, H, T).
+
+    Returns (h (B,H,T,dh), C (B,H,dh,dh), n (B,H,dh), m (B,H)) from a
+    zero initial state.  T must be a multiple of ``chunk``.
+    """
+    b, hh, t, dh = q.shape
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    kernel = functools.partial(_mlstm_kernel, chunk=chunk)
+    h, cT, nT, mT = pl.pallas_call(
+        kernel,
+        grid=(b, hh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, dh), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk, dh), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk, dh), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, c: (b_, h_, c)),
+            pl.BlockSpec((1, 1, chunk), lambda b_, h_, c: (b_, h_, c)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, dh), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, dh, dh), lambda b_, h_, c: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, dh), lambda b_, h_, c: (b_, h_, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b_, h_, c: (b_, h_, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hh, t, dh), q.dtype),
+            jax.ShapeDtypeStruct((b, hh, dh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, hh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, hh, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((dh,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, i_pre, f_pre)
+    return h, cT, nT, mT[..., 0]

@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: small, obviously-correct, O(T^2)
+where the kernels are blocked.  Tests sweep shapes/dtypes and
+``assert_allclose`` kernel vs oracle (interpret=True on CPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# Attention oracle (causal / sliding-window / softcap / GQA)
+# ----------------------------------------------------------------------
+
+def attention_mask(q_len: int, kv_len: int, *, causal: bool,
+                   window: Optional[int], q_offset: int = 0,
+                   kv_offset: int = 0) -> jnp.ndarray:
+    """(q_len, kv_len) bool mask. Query i sits at absolute position
+    ``q_offset + i``; key j at absolute position ``kv_offset + j``
+    (rolling caches use negative kv_offset; negative key positions are
+    invalid).  ``window`` w keeps keys with ``q_pos - w < k_pos <=
+    q_pos`` (sliding window incl. self)."""
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    k_pos = kv_offset + jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    mask &= k_pos >= 0
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    return mask
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+        causal: bool = True, window: Optional[int] = None,
+        softcap: Optional[float] = None, q_offset: int = 0,
+        kv_offset: int = 0,
+        scale: Optional[float] = None) -> jnp.ndarray:
+    """Reference multi-head attention.
+
+    q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D) with Hq % Hkv == 0 (GQA).
+    Returns (B, Hq, Tq, D) in q.dtype.  All math in f32.
+    """
+    b, hq, tq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    qf = q.astype(jnp.float32)
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    sc = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * sc
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = attention_mask(tq, k.shape[2], causal=causal, window=window,
+                          q_offset=q_offset, kv_offset=kv_offset)
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # Fully-masked rows (can happen with windows) -> zeros, not NaN.
+    p = jnp.where(mask.any(-1)[None, None, :, None], p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# RG-LRU oracle (diagonal gated linear recurrence, De et al. 2024)
+# ----------------------------------------------------------------------
+
+def rglru(x: jnp.ndarray, a: jnp.ndarray, gate_x: jnp.ndarray,
+          h0: Optional[jnp.ndarray] = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (gx_t * x_t).
+
+    x, a, gate_x: (B, T, D) with a in (0, 1).  Returns (y, h_T).
+    """
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    gx = gate_x.astype(jnp.float32)
+    inp = jnp.sqrt(jnp.maximum(1.0 - af * af, 0.0)) * (gx * xf)
+    if h0 is None:
+        h0 = jnp.zeros((x.shape[0], x.shape[2]), jnp.float32)
+
+    def step(h, ab):
+        a_t, i_t = ab
+        h = a_t * h + i_t
+        return h, h
+
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (af.swapaxes(0, 1), inp.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), hT
+
+
+# ----------------------------------------------------------------------
+# Masked FedAvg reduction oracle (paper §II-B aggregation)
+# ----------------------------------------------------------------------
+
+def fedavg_reduce(updates: jnp.ndarray, weights: jnp.ndarray,
+                  active: jnp.ndarray) -> jnp.ndarray:
+    """FedAvg over the reconstructable active set.
+
+    updates: (n, D) flattened per-client updates; weights: (n,) scalar
+    aggregation weights (sample counts); active: (n,) bool/float mask
+    (A_v^r membership).  Returns (D,) = sum_u m_u w_u x_u / sum_u m_u w_u.
+    """
+    w = (weights.astype(jnp.float32) * active.astype(jnp.float32))
+    denom = jnp.maximum(w.sum(), 1e-12)
+    return (jnp.einsum("n,nd->d", w, updates.astype(jnp.float32))
+            / denom).astype(updates.dtype)
+
+
+# ----------------------------------------------------------------------
+# Chunk quantization oracle (int8 symmetric per chunk)
+# ----------------------------------------------------------------------
+
+def chunk_quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (n_chunks, chunk_elems) f32 -> (int8 codes, f32 scales (n,1))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def chunk_dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,3 @@
+# Launch layer: mesh construction, dry-run, train/serve drivers.
+# NOTE: import nothing heavy here — dryrun.py must set XLA_FLAGS before
+# any jax initialization.

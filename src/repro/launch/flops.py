@@ -1,0 +1,55 @@
+"""Analytic MODEL_FLOPS per cell (§Roofline's 'useful compute' term).
+
+Prompt-standard accounting: MODEL_FLOPS = 6*N*D for training (fwd+bwd),
+2*N*D for forward-only (prefill), 2*N*B per decoded token — with
+N = active parameter count (MoE: top-k experts only).  Attention
+score/value FLOPs are added explicitly since at 32k context they are a
+material fraction (12*L*T^2*d_head*H per token-batch for full causal
+attention, halved for the causal triangle, windowed for local layers).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ShapeSpec
+from repro.models import ArchConfig
+
+
+def _attn_flops_per_seq(cfg: ArchConfig, t: int) -> float:
+    """Score+value matmul FLOPs for ONE sequence of length t (fwd)."""
+    kinds = (list(cfg.pattern) * cfg.n_cycles) + list(cfg.tail_kinds)
+    total = 0.0
+    for k in kinds:
+        if k in ("global", "moe"):
+            pairs = t * t / 2 if cfg.causal else t * t
+        elif k == "local":
+            w = cfg.window or t
+            pairs = min(w, t) * t        # banded
+        else:
+            continue                     # recurrent: counted via params
+        total += 4.0 * pairs * cfg.n_heads * cfg.head_dim
+    return total
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return (6.0 * n_active * tokens
+                + 3.0 * shape.global_batch * _attn_flops_per_seq(
+                    cfg, shape.seq_len))
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return (2.0 * n_active * tokens
+                + shape.global_batch * _attn_flops_per_seq(
+                    cfg, shape.seq_len))
+    # decode: one token against a seq_len cache
+    kinds = (list(cfg.pattern) * cfg.n_cycles) + list(cfg.tail_kinds)
+    attn = 0.0
+    for k in kinds:
+        if k in ("global", "moe"):
+            span = shape.seq_len
+        elif k == "local":
+            span = min(cfg.window or shape.seq_len, shape.seq_len)
+        else:
+            continue
+        attn += 4.0 * span * cfg.n_heads * cfg.head_dim
+    return shape.global_batch * (2.0 * n_active + attn)

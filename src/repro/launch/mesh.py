@@ -1,0 +1,37 @@
+"""Production mesh construction (a function — importing this module
+never touches jax device state).
+
+Axes:
+    pod   — FL clients (FLTorrent dissemination axis; DP-outer)
+    data  — within-client data parallel + ZeRO/FSDP shard axis
+    model — tensor / expert parallel axis
+
+Scaling story (DESIGN.md §5): capacity grows by adding pods (clients),
+which is the paper's own scaling dimension (Table III shows flat
+warm-up share from 100 to 500 peers) — ``n_pods`` is a parameter, not a
+constant, and every collective in the torrent schedule is written for
+general P.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, n_pods: int = 2):
+    shape = (n_pods, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many devices this host has (tests)."""
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def pod_axis_size(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(sizes.get("pod", 1))

@@ -1,0 +1,201 @@
+"""Per-cell step functions, ShapeDtypeStruct inputs, and shardings.
+
+``build_cell(cfg, shape, mesh)`` returns everything the dry-run needs:
+
+    step        — the function to jit (train / prefill / serve)
+    args        — ShapeDtypeStruct stand-ins (no device allocation)
+    in_specs    — matching PartitionSpec tree
+    out_specs   — or None (XLA chooses)
+
+Input layouts per shape kind (assignment):
+    train    batch = {inputs (P, B/P, T) i32, labels same}  + params/opt
+    prefill  inputs (B, T) i32 (hubert: (B, T, D) f32 frames)
+    decode   caches @ seq_len, tokens (B,) i32, pos () i32
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import SHAPES, ShapeSpec
+from repro.dist.fl_step import make_fl_train_step, make_serve_step
+from repro.models import (ArchConfig, forward, init_decode_cache,
+                          init_params, prefill)
+from repro.optim import adamw_init
+from repro.optim.schedules import linear_warmup_cosine
+from repro.sharding.api import DEFAULT_RULES, _filter_axes, param_specs
+from repro.launch.mesh import pod_axis_size
+
+
+def to_shardings(mesh, tree):
+    """PartitionSpec tree -> NamedSharding tree (None leaves pass)."""
+    from jax.sharding import NamedSharding
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_axes(mesh, size: int):
+    """Mesh axes for a batch dim of ``size`` (pod+data, filtered)."""
+    return _filter_axes(mesh, ("pod", "data"), size)
+
+
+def _data_axes(mesh, size: int):
+    return _filter_axes(mesh, "data", size)
+
+
+def opt_state_specs(pspecs):
+    from repro.optim.adamw import OptState
+    return OptState(step=P(), master=pspecs, m=pspecs,
+                    v=jax.tree_util.tree_map(lambda s: s, pspecs))
+
+
+def cache_specs(cfg: ArchConfig, cache_shapes, mesh, batch: int):
+    """PartitionSpecs for a decode-cache pytree.
+
+    KV caches: shard batch over (pod, data); shard kv-heads over model
+    when divisible, else fall back to sharding head_dim over model
+    (GQA with few kv heads — attention then contracts a sharded dim and
+    XLA inserts the all-reduce; memory is what matters at 32k/500k).
+    Recurrent state: shard the feature dim over model.
+    """
+    b_ax = _batch_axes(mesh, batch)
+
+    def spec(path, leaf):
+        keys = [str(getattr(q, "key", getattr(q, "idx", ""))) for q in path]
+        name = keys[-1]
+        stacked = keys[0] == "cycles"
+        off = 1 if stacked else 0
+        shape = leaf.shape
+        lead = (None,) if stacked else ()
+        if name in ("k", "v"):                    # (B, kv, S, dh)
+            kv_ax = _filter_axes(mesh, "model", shape[off + 1])
+            dh_ax = None
+            if kv_ax is None:
+                dh_ax = _filter_axes(mesh, "model", shape[off + 3])
+            return P(*lead, b_ax, kv_ax, None, dh_ax)
+        if name == "h" and len(shape) == off + 2:  # rglru (B, dr)
+            return P(*lead, b_ax, _filter_axes(mesh, "model",
+                                               shape[off + 1]))
+        if name == "conv":                         # (B, w-1, D)
+            return P(*lead, b_ax, None,
+                     _filter_axes(mesh, "model", shape[off + 2]))
+        if name == "C":                            # (B, H, dh, dh)
+            return P(*lead, b_ax, None, None,
+                     _filter_axes(mesh, "model", shape[off + 3]))
+        if name in ("n", "m", "c"):                # (B, H[, dh])
+            parts = [b_ax] + [None] * (len(shape) - off - 1)
+            return P(*lead, *parts)
+        if name == "h":                            # slstm (B, H, dh)
+            return P(*lead, b_ax, None, None)
+        return P(*((None,) * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
+               rules: Optional[dict] = None, microbatch: int = 0,
+               torrent_blocks: int = 4, compress: bool = False,
+               ce_chunk: int = 512):
+    """Returns dict(step, args, in_specs, out_specs, meta)."""
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    n_pods = pod_axis_size(mesh)
+    key = jax.random.PRNGKey(0)
+    params_sh = jax.eval_shape(functools.partial(init_params, cfg), key)
+    pspecs = param_specs(params_sh, mesh, rules)
+
+    if shape.kind == "train":
+        b_local = shape.global_batch // n_pods
+        tok_t = jnp.int32
+        if cfg.has_embedding:
+            inp = jax.ShapeDtypeStruct((n_pods, b_local, shape.seq_len),
+                                       tok_t)
+        else:
+            inp = jax.ShapeDtypeStruct(
+                (n_pods, b_local, shape.seq_len, cfg.d_model),
+                jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+        lab = jax.ShapeDtypeStruct((n_pods, b_local, shape.seq_len),
+                                   tok_t)
+        opt_sh = jax.eval_shape(adamw_init, params_sh)
+        ospecs = opt_state_specs(pspecs)
+        batch_spec = {
+            "inputs": P("pod" if n_pods > 1 else None,
+                        _data_axes(mesh, b_local),
+                        *([None] * (len(inp.shape) - 2))),
+            "labels": P("pod" if n_pods > 1 else None,
+                        _data_axes(mesh, b_local), None),
+        }
+        step = make_fl_train_step(
+            cfg, mesh, lr_schedule=linear_warmup_cosine(3e-4, 100, 10000),
+            n_pods=n_pods, rules=rules, torrent_blocks=torrent_blocks,
+            compress=compress, microbatch=microbatch)
+        args = (params_sh, opt_sh,
+                {"inputs": inp, "labels": lab},
+                jax.ShapeDtypeStruct((n_pods,), jnp.float32),
+                jax.ShapeDtypeStruct((n_pods,), jnp.float32))
+        in_specs = (pspecs, ospecs, batch_spec, P(), P())
+        out_specs = (pspecs, ospecs, {"loss": P(), "lr": P()})
+        return dict(step=step, args=args, in_specs=in_specs,
+                    out_specs=out_specs,
+                    meta=dict(kind="train", n_pods=n_pods,
+                              tokens=shape.global_batch * shape.seq_len))
+
+    if shape.kind == "prefill":
+        b = shape.global_batch
+        b_ax = _batch_axes(mesh, b)
+        if cfg.has_embedding:
+            inp = jax.ShapeDtypeStruct((b, shape.seq_len), jnp.int32)
+            in_sp = P(b_ax, None)
+        else:
+            inp = jax.ShapeDtypeStruct(
+                (b, shape.seq_len, cfg.d_model),
+                jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32)
+            in_sp = P(b_ax, None, None)
+        if cfg.causal:
+            def step(p, x):
+                return prefill(cfg, p, x, max_len=shape.seq_len)
+        else:
+            def step(p, x):
+                return forward(cfg, p, x)
+        return dict(step=step, args=(params_sh, inp),
+                    in_specs=(pspecs, in_sp), out_specs=None,
+                    meta=dict(kind="prefill", n_pods=n_pods,
+                              tokens=b * shape.seq_len))
+
+    if shape.kind == "decode":
+        # Serving has no optimizer state: ZeRO/FSDP sharding of weights
+        # would all-gather params on every token step (§Perf global
+        # lever — qwen3 decode_32k was collective-dominant because of
+        # it).  Weights stay TP-sharded only — unless the TP-only
+        # replica is too large next to the KV cache (chameleon-34B's
+        # 4.3 GiB/device replica pushed the cell past 16 GiB), in which
+        # case weight streaming stays sharded.
+        tp = 1
+        for ax, sz in zip(mesh.axis_names, mesh.devices.shape):
+            if ax == "model":
+                tp = int(sz)
+        tp_replica_bytes = cfg.param_count() * 2 / max(tp, 1)
+        if tp_replica_bytes <= 512 * 2**20:
+            rules_serve = dict(rules)
+            rules_serve["zero"] = None
+            pspecs = param_specs(params_sh, mesh, rules_serve)
+        b = shape.global_batch
+        b_ax = _batch_axes(mesh, b)
+        caches_sh = jax.eval_shape(
+            lambda: init_decode_cache(cfg, b, shape.seq_len))
+        cspecs = cache_specs(cfg, caches_sh, mesh, b)
+        tokens = jax.ShapeDtypeStruct((b,), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        serve = make_serve_step(cfg)
+        return dict(step=serve,
+                    args=(params_sh, caches_sh, tokens, pos),
+                    in_specs=(pspecs, cspecs, P(b_ax), P()),
+                    out_specs=None,
+                    meta=dict(kind="decode", n_pods=n_pods, tokens=b))
+
+    raise ValueError(shape.kind)

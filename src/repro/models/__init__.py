@@ -1,0 +1,11 @@
+"""Model zoo: unified decoder LM / MoE / xLSTM / RecurrentGemma / encoder.
+
+All 10 assigned architectures instantiate through ``ArchConfig`` +
+``init_params`` / ``train_loss`` / ``prefill`` / ``decode_step``.
+"""
+from .config import ArchConfig
+from .model import (decode_step, forward, init_decode_cache, init_params,
+                    param_count, prefill, train_loss)
+
+__all__ = ["ArchConfig", "init_params", "forward", "train_loss",
+           "prefill", "decode_step", "init_decode_cache", "param_count"]

@@ -1,0 +1,5 @@
+from .api import (DEFAULT_RULES, axis_rules, logical_constraint,
+                  param_specs, spec_for_path)
+
+__all__ = ["DEFAULT_RULES", "axis_rules", "logical_constraint",
+           "param_specs", "spec_for_path"]

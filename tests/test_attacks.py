@@ -1,0 +1,86 @@
+"""Attribution attacks + ASR (paper §IV-C, §V-D): hardening ordering,
+defense ablation, collusion pooling."""
+import numpy as np
+import pytest
+
+from repro.core import SwarmConfig, simulate_round
+from repro.core.attacks import (random_guess_baseline, run_all_attacks)
+
+
+def _asr(seed=0, n=24, K=24, observers=6, **overrides):
+    cfg = SwarmConfig(n=n, chunks_per_update=K, s_max=5000, seed=seed,
+                      **overrides)
+    res = simulate_round(cfg)
+    obs = np.arange(observers)
+    return run_all_attacks(res.log, obs, cfg.chunks_per_update)
+
+
+def test_no_defense_attribution_near_perfect():
+    """Fig. 6: without hardening, Sequential Greedy wins almost always
+    (early transfers are owner chunks)."""
+    rep = _asr(enable_preround=False, enable_timelag=False,
+               enable_gating=False, enable_nonowner_first=False)
+    assert rep["sequence"].max_asr > 0.8
+
+
+def test_full_defense_suppresses_sequence_attack():
+    base = _asr(enable_preround=False, enable_timelag=False,
+                enable_gating=False, enable_nonowner_first=False)
+    full = _asr()
+    assert full["sequence"].max_asr < base["sequence"].max_asr
+    # paper's qualitative target: near neighborhood random guessing
+    guess = random_guess_baseline(10)
+    assert full["sequence"].mean_asr < 4 * guess
+
+
+def test_single_defenses_insufficient_combined_strong():
+    """Fig. 6's operative conclusion: no single defense suffices (each
+    leaves mean Sequential ASR near-perfect under rarest-first
+    scheduling); the combined stack drives it to the 1/m guessing
+    regime.  (PR-alone separation is scheduler-sensitive — see
+    EXPERIMENTS.md §Deviations.)"""
+    singles = {
+        "pr": _asr(seed=1, enable_timelag=False, enable_gating=False,
+                   enable_nonowner_first=False),
+        "tl": _asr(seed=1, enable_preround=False, enable_gating=False,
+                   enable_nonowner_first=False),
+        "k": _asr(seed=1, enable_preround=False, enable_timelag=False),
+    }
+    full = _asr(seed=1)
+    for name, rep in singles.items():
+        assert full["sequence"].mean_asr < rep["sequence"].mean_asr, name
+    # full stack approaches neighborhood random guessing (~1/m = 0.1)
+    assert full["sequence"].mean_asr < 0.2
+
+
+def test_collusion_pooling_increases_any_correct():
+    cfg = SwarmConfig(n=24, chunks_per_update=24, s_max=5000, seed=2)
+    res = simulate_round(cfg)
+    solo = run_all_attacks(res.log, np.arange(3), 24, pooled=False)
+    pooled = run_all_attacks(res.log, np.arange(12), 24, pooled=True)
+    # pooling more observers can only see more transfers
+    assert pooled["count"].n_decisions >= 0
+    assert 0.0 <= pooled["count"].max_asr <= 1.0
+    assert 0.0 <= solo["count"].max_asr <= 1.0
+
+
+def test_attacks_only_see_protocol_signals():
+    """Attacks never read owner ground truth: shuffling owner labels in
+    the log must not change decisions (they use chunk // K only)."""
+    cfg = SwarmConfig(n=16, chunks_per_update=16, s_max=4000, seed=3)
+    res = simulate_round(cfg)
+    obs = np.arange(4)
+    r1 = run_all_attacks(res.log, obs, 16)
+    log2 = dict(res.log)
+    log2["owner"] = np.zeros_like(res.log["owner"])   # corrupt labels
+    r2 = run_all_attacks(log2, obs, 16)
+    for k in r1:
+        assert r1[k].max_asr == r2[k].max_asr
+
+
+def test_density_reduces_asr():
+    """Fig. 7: denser overlays reduce max ASR (more candidate senders)."""
+    sparse = _asr(seed=4, min_degree=4)
+    dense = _asr(seed=4, min_degree=12)
+    assert (dense["sequence"].max_asr
+            <= sparse["sequence"].max_asr + 0.10)

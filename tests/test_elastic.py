@@ -1,0 +1,67 @@
+"""Elastic re-meshing: the same model code must produce valid shardings
+on ANY mesh (clients join/leave across FL rounds -> pod counts and
+slice shapes change; paper §III-E cross-round churn)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.models import init_params
+from repro.sharding.api import DEFAULT_RULES, param_specs
+
+
+class FakeMesh:
+    def __init__(self, shape, names):
+        self.devices = np.empty(shape)
+        self.axis_names = names
+
+
+MESHES = [
+    FakeMesh((16, 16), ("data", "model")),
+    FakeMesh((2, 16, 16), ("pod", "data", "model")),
+    FakeMesh((4, 8), ("data", "model")),
+    FakeMesh((8, 4, 2), ("pod", "data", "model")),
+    FakeMesh((1, 1), ("data", "model")),
+]
+
+
+def _axis_size(mesh, name):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(sizes.get(name, 1))
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "olmoe-1b-7b",
+                                  "xlstm-350m", "granite-moe-1b-a400m"])
+def test_specs_valid_on_every_mesh(arch):
+    cfg = get_config(arch, reduced=False)
+    params = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    for mesh in MESHES:
+        specs = param_specs(params, mesh, DEFAULT_RULES)
+        leaves = jax.tree_util.tree_leaves(
+            params)
+        spec_leaves = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(leaves) == len(spec_leaves)
+        for leaf, spec in zip(leaves, spec_leaves):
+            for i, part in enumerate(spec):
+                if part is None:
+                    continue
+                names = part if isinstance(part, tuple) else (part,)
+                prod = int(np.prod([_axis_size(mesh, a) for a in names]))
+                assert leaf.shape[i] % prod == 0, (
+                    f"{arch}: dim {i} of {leaf.shape} not divisible by "
+                    f"{names} on mesh {mesh.devices.shape}")
+
+
+def test_granite_vocab_never_sharded_16way():
+    """vocab 49155 is indivisible by 16 — the filter must leave it
+    replicated rather than erroring (elastic-mesh contract)."""
+    cfg = get_config("granite-moe-1b-a400m")
+    params = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_specs(params, FakeMesh((16, 16), ("data", "model")),
+                        DEFAULT_RULES)
+    embed_spec = specs["embed"]
+    assert embed_spec[0] is None

@@ -1,0 +1,101 @@
+"""Validate the structural HLO cost model (roofline methodology):
+
+1. On loop-free modules it must agree with XLA's own cost_analysis.
+2. On scan modules, XLA undercounts (body counted once); the structural
+   model applies the known_trip_count correction and must match the
+   analytic value.  This is the justification for §Roofline numbers.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_loop_free_matches_xla():
+    def f(x, w1, w2):
+        h = jnp.tanh(x @ w1)
+        return (h @ w2).sum()
+
+    x = jnp.ones((128, 256))
+    w1 = jnp.ones((256, 512))
+    w2 = jnp.ones((512, 64))
+    c = _compile(f, x, w1, w2)
+    mine = H.analyze(c.as_text())
+    ca = c.cost_analysis()
+    assert mine.flops == pytest.approx(ca["flops"], rel=0.02)
+    assert mine.hbm_bytes == pytest.approx(ca["bytes accessed"], rel=0.1)
+
+
+def test_scan_trip_count_correction():
+    """XLA counts a 13-iteration scan body once; we must count 13x."""
+    W = jnp.ones((13, 64, 64))
+
+    def f(x, W):
+        def body(c, w):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, W)
+        return y.sum()
+
+    x = jnp.ones((64, 64))
+    c = _compile(f, x, W)
+    xla_flops = c.cost_analysis()["flops"]
+    mine = H.analyze(c.as_text())
+    analytic = 13 * 2 * 64 ** 3
+    assert xla_flops < 0.2 * analytic          # XLA undercounts
+    assert mine.flops == pytest.approx(analytic, rel=0.05)
+
+
+def test_nested_scan_correction():
+    W = jnp.ones((4, 3, 32, 32))
+
+    def f(x, W):
+        def outer(c, wrow):
+            def inner(ci, w):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, wrow)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, W)
+        return y.sum()
+
+    x = jnp.ones((32, 32))
+    c = _compile(f, x, W)
+    mine = H.analyze(c.as_text())
+    analytic = 12 * 2 * 32 ** 3
+    assert mine.flops == pytest.approx(analytic, rel=0.05)
+
+
+def test_collective_bytes_factors():
+    """Ring-model byte factors per collective type."""
+    line_ag = ("  %ag = f32[8,128]{1,0} all-gather(%x), channel_id=1, "
+               "replica_groups=[2,4]<=[8], dimensions={0}")
+    ins = H.Instr("ag", "f32[8,128]{1,0}", "all-gather", line_ag)
+    nb = 8 * 128 * 4
+    assert H._collective_bytes(ins) == pytest.approx(nb * 3 / 4)
+
+    line_cp = ("  %cp = bf16[64]{0} collective-permute(%x), "
+               "source_target_pairs={{0,1},{1,0}}")
+    ins = H.Instr("cp", "bf16[64]{0}", "collective-permute", line_cp)
+    assert H._collective_bytes(ins) == pytest.approx(64 * 2)
+
+
+def test_dtype_bytes_table():
+    assert H._nbytes("f32[4,4]{1,0}") == 64
+    assert H._nbytes("bf16[10]") == 20
+    assert H._nbytes("(s32[], f32[2,2])") == 4 + 16
+    assert H._nbytes("pred[8]") == 8
+
+
+def test_roofline_terms_structure():
+    c = H.Costs(flops=197e12, hbm_bytes=819e9, coll_bytes=50e9)
+    t = H.roofline_terms(c, model_flops_global=197e12 * 256, n_chips=256)
+    assert t["t_compute_s"] == pytest.approx(1.0)
+    assert t["t_memory_s"] == pytest.approx(1.0)
+    assert t["t_collective_s"] == pytest.approx(1.0)
+    assert t["roofline_fraction"] == pytest.approx(1.0)
+    assert t["useful_flops_ratio"] == pytest.approx(1.0)

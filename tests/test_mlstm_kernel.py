@@ -1,0 +1,58 @@
+"""Pallas chunkwise-mLSTM kernel vs the (already sequence-validated)
+XLA chunkwise oracle, swept over shapes/dtypes/chunk sizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.mlstm import mlstm_chunkwise
+from repro.models.layers import _mlstm_chunkwise
+
+
+def _oracle(q, k, v, ip, fp, chunk):
+    b, h, t, dh = q.shape
+    init = (jnp.zeros((b, h, dh, dh)), jnp.zeros((b, h, dh)),
+            jnp.full((b, h), -1e30))
+    (C, n, m), hs = _mlstm_chunkwise(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), ip.transpose(0, 2, 1),
+        fp.transpose(0, 2, 1), init, chunk=chunk, remat=False)
+    return hs.reshape(b, t, h, dh).transpose(0, 2, 1, 3), C, n, m
+
+
+@pytest.mark.parametrize("b,h,t,dh,chunk", [
+    (2, 4, 64, 16, 16), (1, 2, 128, 32, 32), (1, 1, 256, 128, 128),
+    (2, 2, 96, 8, 16),
+])
+def test_mlstm_kernel_vs_oracle(b, h, t, dh, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(t * 13 + dh), 5)
+    q = jax.random.normal(ks[0], (b, h, t, dh)) * (dh ** -0.5)
+    k = jax.random.normal(ks[1], (b, h, t, dh)) * (dh ** -0.5)
+    v = jax.random.normal(ks[2], (b, h, t, dh))
+    ip = jax.random.normal(ks[3], (b, h, t))
+    fp = jax.random.normal(ks[4], (b, h, t)) + 1.0
+    h1, C1, n1, m1 = _oracle(q, k, v, ip, fp, chunk)
+    h2, C2, n2, m2 = mlstm_chunkwise(q, k, v, ip, fp, chunk=chunk,
+                                     interpret=True)
+    np.testing.assert_allclose(h2, h1, atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(C2, C1, atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(n2, n1, atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(m2, m1, atol=5e-4, rtol=5e-4)
+
+
+def test_mlstm_kernel_bf16():
+    b, h, t, dh = 1, 2, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    q = (jax.random.normal(ks[0], (b, h, t, dh)) * dh ** -0.5
+         ).astype(jnp.bfloat16)
+    k = (jax.random.normal(ks[1], (b, h, t, dh)) * dh ** -0.5
+         ).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (b, h, t, dh)).astype(jnp.bfloat16)
+    ip = jax.random.normal(ks[3], (b, h, t))
+    fp = jax.random.normal(ks[4], (b, h, t)) + 1.0
+    h2, *_ = mlstm_chunkwise(q, k, v, ip, fp, chunk=32, interpret=True)
+    assert h2.dtype == jnp.bfloat16
+    h1, *_ = _oracle(q.astype(jnp.float32), k.astype(jnp.float32),
+                     v.astype(jnp.float32), ip, fp, 32)
+    np.testing.assert_allclose(h2.astype(jnp.float32), h1, atol=3e-2,
+                               rtol=3e-2)

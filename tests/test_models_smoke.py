@@ -1,0 +1,99 @@
+"""Per-arch REDUCED-config smoke tests (assignment deliverable (f)):
+one forward/train step on CPU asserting output shapes + no NaNs, plus
+prefill/decode agreement for causal archs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import (decode_step, forward, init_decode_cache,
+                          init_params, prefill, train_loss)
+
+
+def _inputs(cfg, b=2, t=32, key=None):
+    key = key or jax.random.PRNGKey(0)
+    if cfg.has_embedding:
+        return jax.random.randint(key, (b, t), 0, cfg.vocab)
+    return jax.random.normal(key, (b, t, cfg.d_model), jnp.float32)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, reduced=True)
+    p = init_params(cfg, jax.random.PRNGKey(0))
+    x = _inputs(cfg)
+    logits = forward(cfg, p, x)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), "NaN/Inf in logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite_grads(arch):
+    cfg = get_config(arch, reduced=True)
+    p = init_params(cfg, jax.random.PRNGKey(1))
+    x = _inputs(cfg)
+    y = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, cfg.vocab)
+    loss, g = jax.value_and_grad(
+        lambda pp: train_loss(cfg, pp, x, y))(p)
+    assert bool(jnp.isfinite(loss))
+    gn = sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+             for l in jax.tree_util.tree_leaves(g))
+    assert bool(jnp.isfinite(gn)) and float(gn) > 0.0
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if get_config(a, reduced=True).causal])
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch, reduced=True)
+    p = init_params(cfg, jax.random.PRNGKey(3))
+    x = _inputs(cfg, b=2, t=24)
+    logits_pf, caches = prefill(cfg, p, x, max_len=32)
+    full = forward(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(logits_pf, np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               atol=2e-2, rtol=2e-2)
+    tok = jnp.argmax(logits_pf, -1).astype(jnp.int32)
+    lg, caches = decode_step(cfg, p, caches, tok, jnp.int32(24))
+    x2 = jnp.concatenate([x, tok[:, None]], axis=1) if cfg.has_embedding \
+        else None
+    if x2 is not None:
+        full2 = forward(cfg, p, x2)
+        np.testing.assert_allclose(np.asarray(lg, np.float32),
+                                   np.asarray(full2[:, -1], np.float32),
+                                   atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["xlstm-350m", "recurrentgemma-2b"])
+def test_long_context_state_bounded(arch):
+    """long_500k eligibility: decode state size must not grow with the
+    cache length (recurrent/windowed state only)."""
+    cfg = get_config(arch, reduced=True)
+    c1 = jax.eval_shape(lambda: init_decode_cache(cfg, 1, 128))
+    c2 = jax.eval_shape(lambda: init_decode_cache(cfg, 1, 4096))
+    s1 = sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(c1))
+    s2 = sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(c2))
+    assert s1 == s2, "state grew with context length"
+
+
+def test_encoder_is_bidirectional():
+    cfg = get_config("hubert-xlarge", reduced=True)
+    p = init_params(cfg, jax.random.PRNGKey(4))
+    x = _inputs(cfg, b=1, t=16)
+    base = forward(cfg, p, x)
+    x2 = x.at[:, -1].set(x[:, -1] + 10.0)   # perturb LAST frame
+    out = forward(cfg, p, x2)
+    # bidirectional: early positions change too
+    assert float(jnp.abs(out[:, 0] - base[:, 0]).max()) > 1e-6
+
+
+def test_causal_lm_is_causal():
+    cfg = get_config("qwen3-1.7b", reduced=True)
+    p = init_params(cfg, jax.random.PRNGKey(5))
+    x = _inputs(cfg, b=1, t=16)
+    base = forward(cfg, p, x)
+    x2 = x.at[:, -1].set((x[:, -1] + 1) % cfg.vocab)
+    out = forward(cfg, p, x2)
+    np.testing.assert_allclose(np.asarray(out[:, :-1], np.float32),
+                               np.asarray(base[:, :-1], np.float32),
+                               atol=1e-4)

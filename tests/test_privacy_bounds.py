@@ -1,0 +1,103 @@
+"""Property tests for the unlinkability analysis (paper §IV, Eq. 1-5).
+
+Hypothesis sweeps the mechanism knobs and asserts the system invariants:
+Eq. (1) holds transfer-by-transfer in the simulator's log; the closed
+forms are monotone in the directions the analysis claims; collusion can
+loosen mixing but never beat the gating cap.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import SwarmConfig, simulate_round
+from repro.core import privacy
+
+
+# ----------------------------------------------------------------------
+# Closed-form bound properties
+# ----------------------------------------------------------------------
+
+@given(kappa=st.integers(1, 8), k=st.integers(1, 500))
+def test_eq1_cap_range(kappa, k):
+    cap = privacy.per_transfer_cap(kappa, k)
+    assert 0.0 < cap <= 1.0
+    if k >= kappa:
+        assert cap == pytest.approx(kappa / k)
+
+
+@given(kappa=st.integers(1, 4), mu=st.floats(0, 200),
+       m=st.floats(0, 50), q=st.floats(0.01, 1.0),
+       eps=st.floats(0.01, 0.99))
+def test_eq2_tightens_with_mass(kappa, mu, m, q, eps):
+    """More spray/lag mass -> smaller (tighter) posterior bound."""
+    b1, e1 = privacy.high_prob_posterior_bound(kappa, mu, m, 3, q, eps)
+    b2, e2 = privacy.high_prob_posterior_bound(kappa, mu + 10, m + 5, 3,
+                                               q, eps)
+    assert b2 <= b1 + 1e-12
+    assert 0.0 <= e1 <= 1.0 and 0.0 <= e2 <= 1.0
+
+
+@given(kappa=st.integers(1, 4), k=st.integers(2, 300),
+       x=st.floats(0, 500), rho=st.floats(0, 1), phi=st.floats(0, 1))
+def test_eq3_never_beats_gating_cap(kappa, k, x, rho, phi):
+    """Collusion loosens mixing but cannot beat kappa/k (paper §IV-B)."""
+    b = privacy.alliance_filter_bound(kappa, k, x, rho, phi)
+    assert b <= privacy.per_transfer_cap(kappa, k) + 1e-12
+    # stronger coalition (phi up) can only weaken privacy:
+    b_weak = privacy.alliance_filter_bound(kappa, k, x, rho, 0.0)
+    assert b_weak <= b + 1e-12
+
+
+@given(s=st.integers(1, 50), kappa=st.integers(1, 3),
+       k=st.integers(2, 200), x=st.floats(0, 100))
+def test_eq5_union_bound(s, kappa, k, x):
+    one = privacy.repeated_observation_bound(1, kappa, k, x, 0.0, 0.0)
+    many = privacy.repeated_observation_bound(s, kappa, k, x, 0.0, 0.0)
+    assert many <= min(1.0, s * one) + 1e-12
+    assert many >= one - 1e-12
+
+
+@given(t_lag=st.integers(1, 20))
+def test_lead_probability(t_lag):
+    p = privacy.lead_probability(t_lag)
+    assert 0.0 <= p < 0.5
+
+
+def test_chernoff_tail_monotone():
+    taus = [privacy.chernoff_lower_tail(mu, 0.5) for mu in (1, 5, 20, 80)]
+    assert all(a >= b for a, b in zip(taus, taus[1:]))
+
+
+# ----------------------------------------------------------------------
+# Empirical Eq. (1) on simulated rounds (the system invariant)
+# ----------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=10)
+@given(seed=st.integers(0, 10_000),
+       scheduler=st.sampled_from(
+           ["greedy_fastest_first", "random_fifo", "random_fastest_first"]))
+def test_eq1_holds_in_simulation(seed, scheduler):
+    cfg = SwarmConfig(n=16, chunks_per_update=24, s_max=3000, seed=seed,
+                      scheduler=scheduler)
+    res = simulate_round(cfg)
+    assert privacy.check_eq1(res.log, cfg.owner_throttle, cfg.k_gate)
+
+
+def test_eq1_violated_without_gating():
+    """Ablation: with gating off, early transfers exceed the cap."""
+    cfg = SwarmConfig(n=16, chunks_per_update=24, s_max=3000, seed=3,
+                      enable_gating=False, enable_preround=False,
+                      enable_timelag=False)
+    res = simulate_round(cfg)
+    post = privacy.empirical_posteriors(res.log)
+    cap = privacy.per_transfer_cap(cfg.owner_throttle, cfg.k_gate)
+    assert (post > cap).any()          # owner-biased early transfers
+
+
+def test_spray_mean_regular_overlay():
+    from repro.core.overlay import random_overlay
+    rng = np.random.default_rng(0)
+    adj = random_overlay(30, 8, 0.0, rng)
+    mus = [privacy.spray_mean_adj(10, adj, u) for u in range(30)]
+    # near-regular overlay: mu_u ~= sigma (paper §IV-A)
+    assert abs(np.mean(mus) - 10) < 1.5

@@ -1,0 +1,64 @@
+"""End-to-end behaviour: aggregation semantics (paper §II-B) — all
+clients agree on the FedAvg aggregate over the reconstructable set."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SwarmConfig, simulate_round
+from repro.core.aggregation import (agreement_check, fedavg_flat,
+                                    fedavg_pytree, fedavg_weights)
+
+
+def test_full_dissemination_all_agree():
+    cfg = SwarmConfig(n=12, chunks_per_update=16, s_max=5000, seed=0)
+    res = simulate_round(cfg)
+    assert res.reconstructable.all()
+    rng = np.random.default_rng(0)
+    updates = jnp.asarray(rng.normal(size=(cfg.n, 64)).astype(np.float32))
+    weights = jnp.asarray(rng.uniform(1, 5, cfg.n).astype(np.float32))
+    aggs = [fedavg_flat(updates, weights,
+                        jnp.asarray(res.reconstructable[v], jnp.float32))
+            for v in range(cfg.n)]
+    ref = aggs[0]
+    for a in aggs[1:]:
+        np.testing.assert_allclose(a, ref, atol=1e-6)
+
+
+def test_partial_participation_semantics():
+    """Dropped sole-holder updates leave A_v^r; survivors still agree."""
+    cfg = SwarmConfig(n=10, chunks_per_update=16, s_max=5000, seed=1,
+                      min_degree=5,
+                      enable_preround=False)   # no spray: client 0's
+    res = simulate_round(cfg, dropouts={0: [0]})  # chunks can be lost
+    surv = np.flatnonzero(res.active)
+    recon = res.reconstructable[surv]
+    assert (recon == recon[0]).all()
+    assert recon[0].sum() >= len(surv) - 1
+
+
+def test_fedavg_weights_mask():
+    w = jnp.array([1.0, 2.0, 3.0])
+    m = jnp.array([1.0, 0.0, 1.0])
+    out = fedavg_weights(w, m)
+    np.testing.assert_allclose(out, [0.25, 0.0, 0.75], atol=1e-6)
+
+
+def test_fedavg_pytree_matches_flat():
+    rng = np.random.default_rng(2)
+    trees = [{"a": jnp.asarray(rng.normal(size=(8,)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32))}
+             for _ in range(5)]
+    w = jnp.asarray(rng.uniform(1, 2, 5).astype(np.float32))
+    m = jnp.ones(5)
+    agg = fedavg_pytree(trees, w, m)
+    flat = jnp.stack([jnp.concatenate([t["a"], t["b"].ravel()])
+                      for t in trees])
+    want = fedavg_flat(flat, w, m)
+    got = jnp.concatenate([agg["a"], agg["b"].ravel()])
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_agreement_check_detects_divergence():
+    a = {"x": jnp.ones(4)}
+    b = {"x": jnp.ones(4) * 2}
+    assert agreement_check([a, a])
+    assert not agreement_check([a, b])

@@ -1,0 +1,84 @@
+"""Warm-up mechanics: termination threshold, ablations, K-sweep
+monotonicity, fault tolerance (paper §III-B/E, Figs. 4-5)."""
+import numpy as np
+import pytest
+
+from repro.core import SwarmConfig, simulate_round
+
+
+def test_warmup_threshold_reached():
+    cfg = SwarmConfig(n=16, chunks_per_update=24, s_max=4000, seed=0)
+    res = simulate_round(cfg)
+    # at s_BT every active client holds >= k_term chunks: infer from log
+    log = res.log
+    held = np.full(cfg.n, cfg.chunks_per_update, np.int64)
+    warm = log["phase"] <= 1
+    np.add.at(held, log["receiver"][warm], 1)
+    assert (held >= cfg.k_term).all()
+
+
+def test_k_sweep_monotone():
+    """Fig. 5: warm-up duration grows monotonically with K."""
+    t = []
+    for pct in (0.05, 0.10, 0.25):
+        cfg = SwarmConfig(n=16, chunks_per_update=24, s_max=6000, seed=1,
+                          warmup_threshold_pct=pct)
+        t.append(simulate_round(cfg).metrics.t_warm)
+    assert t[0] <= t[1] <= t[2]
+    assert t[2] > t[0]
+
+
+def test_ablation_toggles_run():
+    """Fig. 4/6 ablations: every defense subset simulates cleanly."""
+    for pr in (False, True):
+        for tl in (False, True):
+            for gate in (False, True):
+                cfg = SwarmConfig(n=12, chunks_per_update=16, s_max=4000,
+                                  seed=2, enable_preround=pr,
+                                  enable_timelag=tl, enable_gating=gate)
+                res = simulate_round(cfg)
+                assert not res.metrics.failed_open
+
+
+def test_spray_seeds_nonneighbors():
+    cfg = SwarmConfig(n=16, chunks_per_update=24, s_max=4000, seed=3)
+    res = simulate_round(cfg)
+    log = res.log
+    spray = log["phase"] == 0
+    assert spray.sum() == cfg.n * cfg.spray_copies
+    # spray targets are non-neighbors of the source (ephemeral tunnels)
+    assert not res.adj[log["sender"][spray], log["receiver"][spray]].any()
+
+
+def test_dropout_fault_tolerance():
+    """§III-E: a dropped client doesn't block the round; aggregation
+    proceeds over the remaining reconstructable set."""
+    cfg = SwarmConfig(n=12, chunks_per_update=16, s_max=4000, seed=4)
+    res = simulate_round(cfg, dropouts={2: [0, 1]})
+    assert not res.active[0] and not res.active[1]
+    # every *surviving* client reconstructs the same active set
+    surv = np.flatnonzero(res.active)
+    recon = res.reconstructable[surv]
+    assert (recon[0] == recon).all()
+    assert recon[0].sum() >= 1        # |A_v^r| >= 1
+
+
+def test_fail_open_on_impossible_deadline():
+    cfg = SwarmConfig(n=16, chunks_per_update=32, s_max=2, seed=5)
+    res = simulate_round(cfg)
+    assert res.metrics.failed_open    # liveness: falls open to BT
+
+
+def test_timelag_within_bounds():
+    cfg = SwarmConfig(n=16, chunks_per_update=24, s_max=4000, seed=6,
+                      lag_slots=3)
+    res = simulate_round(cfg)
+    log = res.log
+    warm = log["phase"] == 1
+    # no sender transmits before its lag expired: earliest sends per
+    # sender happen at slot >= 0 and lags < lag_slots
+    first_send = {}
+    for s, snd in zip(log["slot"][warm], log["sender"][warm]):
+        first_send.setdefault(int(snd), int(s))
+    assert min(first_send.values()) >= 0
+    assert max(first_send.values()) >= 1   # some senders lagged
