@@ -1,0 +1,139 @@
+"""Slot-engine microbenchmark: batched vs loop (tentpole acceptance).
+
+Measures
+
+1. **Headline speedup** — one full default round (spray -> warm-up ->
+   exact BT) at the paper's n=100 / K=64 stress point, batched engine
+   vs the per-receiver loop engine.
+2. **Warm-up slots/sec** — batched-engine scheduler throughput at
+   n in {50, 100, 200, 500} (fluid BT so only the scheduler under test
+   is timed), including the Table III n=500 / K=206 configuration,
+   which must complete its warm-up phase.
+
+Emits ``BENCH_scheduler.json`` (repo root + results/bench/).
+
+Usage:  python benchmarks/bench_scheduler.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from common import banner, save  # noqa: E402
+from repro.core import SwarmConfig, simulate_round  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _round(cfg: SwarmConfig, bt_mode: str = "auto"):
+    t0 = time.time()
+    res = simulate_round(cfg, bt_mode=bt_mode)
+    dt = time.time() - t0
+    m = res.metrics
+    return dt, {
+        "t_warm": m.t_warm,
+        "t_round": m.t_round,
+        "warmup_utilization": round(m.warmup_utilization, 4),
+        "overall_utilization": round(m.overall_utilization, 4),
+        "warmup_share": round(m.warmup_share, 4),
+        "failed_open": m.failed_open,
+    }
+
+
+def headline(n: int = 100, k: int = 64, seed: int = 0, reps: int = 4):
+    """Full exact-BT round, interleaved best-of-reps per engine.
+
+    Interleaving the engines and taking per-engine minima makes the
+    ratio robust to background load on shared boxes (single-run wall
+    clock here swings ~±20%).
+    """
+    best = {"batched": None, "loop": None}
+    met = {}
+    for i in range(reps):
+        for impl in ("batched", "loop"):
+            if impl == "loop" and i >= max(2, reps - 2):
+                continue               # loop is ~6x slower; 2 reps do
+            cfg = SwarmConfig(n=n, chunks_per_update=k, s_max=100_000,
+                              seed=seed, scheduler_impl=impl)
+            dt, m = _round(cfg)
+            if best[impl] is None or dt < best[impl]:
+                best[impl], met[impl] = dt, m
+    out = {}
+    for impl in ("batched", "loop"):
+        out[impl] = {"seconds": round(best[impl], 3), **met[impl]}
+        print(f"  {impl:7s}: {best[impl]:6.2f}s  "
+              f"t_warm={met[impl]['t_warm']} "
+              f"t_round={met[impl]['t_round']} "
+              f"util={met[impl]['warmup_utilization']}", flush=True)
+    out["speedup"] = round(out["loop"]["seconds"]
+                           / out["batched"]["seconds"], 2)
+    print(f"  speedup: {out['speedup']}x", flush=True)
+    return out
+
+
+def warm_throughput(sweep):
+    """Batched warm-up slots/sec across swarm sizes (fluid BT)."""
+    rows = []
+    for n, k, cap in sweep:
+        cfg = SwarmConfig(n=n, chunks_per_update=k, s_max=100_000,
+                          seed=0, scheduler_impl="batched", cand_cap=cap)
+        dt, m = _round(cfg, bt_mode="fluid")
+        row = {"n": n, "K": k, "cand_cap": cap, "seconds": round(dt, 2),
+               "warm_slots_per_sec": round(m["t_warm"] / max(dt, 1e-9), 1),
+               **m}
+        rows.append(row)
+        print(f"  n={n:4d} K={k:3d} cap={cap}: t_warm={m['t_warm']} "
+              f"util={m['warmup_utilization']} "
+              f"{row['warm_slots_per_sec']} warm-slots/s "
+              f"({dt:.1f}s, failed_open={m['failed_open']})", flush=True)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the n=500 Table III configuration")
+    args = ap.parse_args()
+
+    payload = {"bench": "scheduler",
+               "date": time.strftime("%Y-%m-%d %H:%M:%S")}
+
+    banner("Headline: n=100/K=64 full round, batched vs loop")
+    payload["headline_n100_k64"] = headline()
+
+    banner("Batched warm-up throughput sweep (fluid BT)")
+    sweep = [(50, 64, 0), (100, 64, 0), (200, 64, 0)]
+    if not args.quick:
+        # Table III scale: n=500, K=206 (GoogLeNet chunking).  The
+        # packed engine is ~linear in the candidate count, so capping
+        # (cand_cap) no longer pays for itself — run exact.
+        sweep.append((500, 206, 0))
+    payload["warm_throughput"] = warm_throughput(sweep)
+
+    n500 = [r for r in payload["warm_throughput"] if r["n"] == 500]
+    payload["n500_warmup_completed"] = (
+        bool(n500 and not n500[0]["failed_open"]) if n500
+        else "skipped (--quick)")
+    ok = payload["headline_n100_k64"]["speedup"] >= 5.0
+    payload["speedup_target_met"] = ok
+
+    path = save("BENCH_scheduler", payload)
+    root_path = os.path.join(ROOT, "BENCH_scheduler.json")
+    with open(root_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"\nwrote {path}\nwrote {root_path}")
+    print(f"speedup {payload['headline_n100_k64']['speedup']}x "
+          f"(target >=5x: {'OK' if ok else 'MISS'}); "
+          f"n500 warm-up completed: "
+          f"{payload.get('n500_warmup_completed')}")
+
+
+if __name__ == "__main__":
+    main()

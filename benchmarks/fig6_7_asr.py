@@ -19,8 +19,15 @@ from .common import banner, save
 def _run_asr(n, K, observers, seeds=(0, 1), pooled=False, **kw):
     out = {"sequence": [], "count": [], "cluster": [], "any": []}
     for seed in seeds:
+        # Attack figures pin the reference loop engine: its sequential
+        # receiver processing (early receivers drain full downlink,
+        # exhausting their non-owner unions into the owner fallback) is
+        # the warm-up traffic shape the paper's no-defense ASR
+        # baselines assume.  The batched engine round-robins receivers,
+        # which *lowers* undefended ASR (fairer mixing) — fine for
+        # throughput studies, wrong for reproducing Figs. 6-7 bars.
         cfg = SwarmConfig(n=n, chunks_per_update=K, s_max=50_000,
-                          seed=seed, **kw)
+                          seed=seed, scheduler_impl="loop", **kw)
         res = simulate_round(cfg, bt_mode="fluid")
         obs = np.arange(observers)
         reps = run_all_attacks(res.log, obs, K, pooled=pooled)

@@ -29,7 +29,14 @@ from .schedulers import schedule_centralized
 
 
 def bt_exact_slot(state: SwarmState):
-    """One slot of vanilla BT: rarest-first, random feasible senders."""
+    """One slot of vanilla BT: rarest-first, random feasible senders.
+
+    Routed through the configured slot engine (``scheduler_impl``):
+    with the default batched engine the whole-universe supply matrix is
+    built once per slot and all receivers are matched in vectorized
+    budgeted rounds, which is what makes chunk-level exact BT viable at
+    paper scale (n x K in the millions).
+    """
     return schedule_centralized(state, "random_fifo")
 
 

@@ -27,7 +27,6 @@ import networkx as nx
 import numpy as np
 
 from .state import SwarmState
-from .schedulers import _candidate_columns, _supply_matrix
 
 
 def stage_upper_bound(state: SwarmState) -> int:
@@ -38,10 +37,13 @@ def stage_upper_bound(state: SwarmState) -> int:
     up = np.where(sactive, state.up, 0).astype(np.int64)
     down = np.where(state.active, state.down, 0).astype(np.int64)
 
-    cand = _candidate_columns(state, sactive)
+    cand = state.candidate_columns(sactive)
     if cand.size == 0:
         return 0
-    cand_owner = state.owners[cand]
+    # Shared vectorized supply helper: one (n, m) eligibility build,
+    # per-receiver rows are then plain slices (same path the batched
+    # slot engine uses, so the UB sees exactly the engine's supply).
+    sup_all = state.eligible_supply(cand)
 
     g = nx.DiGraph()
     for v in range(n):
@@ -50,8 +52,7 @@ def stage_upper_bound(state: SwarmState) -> int:
         nbr_idx = np.flatnonzero(state.adj[v] & (up > 0))
         if nbr_idx.size == 0:
             continue
-        sup = _supply_matrix(state, nbr_idx, cand, cand_owner)
-        sup &= (~state.have[v, cand])[None, :]
+        sup = sup_all[nbr_idx] & (~state.have[v, cand])[None, :]
         counts = sup.sum(axis=1)
         for j, u in enumerate(nbr_idx):
             if counts[j] > 0:

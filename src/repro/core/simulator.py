@@ -140,6 +140,7 @@ class RoundSimulator:
         ubs: list[int] = []
         # ---- warm-up (§III-B) ----
         flood_state: dict = {}
+        idle = 0
         while not st.warmup_done() and st.slot < cfg.s_max:
             self._apply_dropouts()
             if collect_maxflow:
@@ -148,6 +149,17 @@ class RoundSimulator:
                 lambda: run_scheduler(st, flood_state))
             st.apply_transfers(snd, rcv, chk, phase_code=1)
             st.slot += 1
+            # Stall guard: lags leave early slots empty, and a receiver
+            # whose only missing chunks are unreplicated owner chunks
+            # may legally wait up to ~K/kappa slots for the owner's
+            # throttled window to rotate around (state.owner_windows).
+            # Only an idle run longer than both means no legal warm-up
+            # transfer exists (e.g. sole suppliers dropped); fail open
+            # to BT instead of spinning to s_max (liveness, §III-E).
+            idle = idle + 1 if len(snd) == 0 else 0
+            rotation = -(-cfg.chunks_per_update // max(cfg.owner_throttle, 1))
+            if idle >= cfg.lag_slots + rotation + 8:
+                break
         t_warm = st.slot
         failed_open = not st.warmup_done()
 

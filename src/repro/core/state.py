@@ -99,6 +99,7 @@ class SwarmState:
         self.slot = 0
         self.phase = "warmup"
         self.any_nonowner = False      # swarm-wide non-owner mass exists
+        self._win_cache: tuple | None = None   # per-slot owner windows
         self.log = TransferLog()
         self.warmup_sent = 0
         self.bt_sent = 0
@@ -134,6 +135,102 @@ class SwarmState:
         start = (self.slot * kappa + (u * 2654435761) % K) % K
         idx = (start + np.arange(kappa)) % K
         return u * K + idx
+
+    def owner_windows(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized per-sender owner windows for the current slot.
+
+        Returns ``(ids, starts, gated)``: ``ids`` is (n, kappa) global
+        chunk ids of every sender's throttled rotation window, ``starts``
+        the (n,) within-update offsets, and ``gated`` the (n,) mask of
+        senders whose cover-set gate is closed (empty eligible window).
+        Mirrors :meth:`eligible_owner_slice` for all senders at once so
+        the batched slot engine never loops over clients; cached per
+        (slot, phase) — ``nonowner`` only changes after transfers apply.
+        """
+        cfg = self.cfg
+        K = cfg.chunks_per_update
+        kappa = cfg.owner_throttle
+        key = (self.slot, self.phase)
+        if self._win_cache is not None and self._win_cache[0] == key:
+            return self._win_cache[1:]
+        u = np.arange(cfg.n, dtype=np.int64)
+        starts = (self.slot * kappa + (u * 2654435761) % K) % K
+        idx = (starts[:, None] + np.arange(kappa, dtype=np.int64)) % K
+        ids = u[:, None] * K + idx
+        gated = (self.nonowner + kappa < cfg.k_gate) & self.any_nonowner
+        self._win_cache = (key, ids, starts, gated)
+        return ids, starts, gated
+
+    def eligible_supply(self, cand: np.ndarray,
+                        rows: np.ndarray | None = None,
+                        have_cols: np.ndarray | None = None) -> np.ndarray:
+        """(len(rows), len(cand)) bool: may row-client serve chunk c?
+
+        Built once per slot by the batched engine (and per receiver-
+        neighborhood by max-flow); applies cover-set gating + owner
+        throttling fully vectorized via :meth:`owner_windows`.
+        ``have_cols`` lets a caller that already gathered
+        ``have[:, cand]`` (all rows) share that buffer; in the ungated
+        phases it is returned as-is, so callers must not mutate it.
+        """
+        cfg = self.cfg
+        ungated = self.phase == "bt" or not cfg.enable_gating
+        K = cfg.chunks_per_update
+        kappa = cfg.owner_throttle
+        if rows is None:
+            # All-rows path: each candidate column has exactly ONE owner
+            # row, so gating touches m cells — no (n, m) broadcast.
+            sup = (np.take(self.have, cand, axis=1)
+                   if have_cols is None else have_cols)
+            if ungated:
+                return sup
+            if have_cols is not None:
+                sup = sup.copy()
+            cand_owner = self.owners[cand]
+            _, starts, gated = self.owner_windows()
+            off = cand - cand_owner * K
+            # chunk c (offset in its update) is in its owner's rotation
+            # window iff (offset - start_u) mod K < kappa, gate open.
+            allowed = (((off - starts[cand_owner]) % K) < kappa)
+            allowed &= ~gated[cand_owner]
+            sup[cand_owner, np.arange(cand.size)] &= allowed
+            return sup
+        sup = self.have[np.ix_(rows, cand)]
+        if ungated:
+            return sup
+        cand_owner = self.owners[cand]
+        _, starts, gated = self.owner_windows()
+        own = cand_owner[None, :] == rows[:, None]
+        off = cand - cand_owner * K
+        in_win = ((off[None, :] - starts[rows][:, None]) % K) < kappa
+        allowed = in_win & ~gated[rows][:, None]
+        sup &= (~own) | allowed
+        return sup
+
+    def candidate_columns(self, sactive: np.ndarray) -> np.ndarray:
+        """Chunk ids any active sender could serve this slot (vectorized).
+
+        Replicated chunks (some non-owner holds them) plus the open
+        owner windows of ungated active senders; optionally capped to
+        the ``cand_cap`` rarest for large-n runs.
+        """
+        cfg = self.cfg
+        if self.phase == "bt" or not cfg.enable_gating:
+            # Chunks already held by every client are needed nowhere, so
+            # dropping them changes no schedule; the BT tail shrinks its
+            # working set as the swarm completes.
+            return np.flatnonzero(self.replicas < cfg.n)
+        mask = self.replicas > 1
+        ids, _, gated = self.owner_windows()
+        ok = sactive & ~gated
+        if ok.any():
+            mask[ids[ok].ravel()] = True
+        cand = np.flatnonzero(mask)
+        cap = cfg.cand_cap
+        if cap and cand.size > cap:
+            sel = np.argpartition(self.replicas[cand], cap - 1)[:cap]
+            cand = np.sort(cand[sel])
+        return cand
 
     def eligible_row(self, u: int) -> np.ndarray:
         """Bool mask over all chunks that u may serve right now."""
@@ -172,13 +269,18 @@ class SwarmState:
         keep &= ~already
         snd, rcv, chk = snd[keep], rcv[keep], chk[keep]
 
-        b = np.empty(len(snd), dtype=np.int64)
-        o = np.empty(len(snd), dtype=np.int64)
-        if len(snd):
-            uniq = np.unique(snd)
-            bs = {int(u): self.buffer_stats(int(u)) for u in uniq}
-            for i, u in enumerate(snd):
-                b[i], o[i] = bs[int(u)]
+        # (B_u, O_u) at send time, vectorized (see buffer_stats):
+        # ungated phases expose the whole inventory; gated warm-up
+        # exposes X_u non-owner chunks plus the open kappa-window.
+        K = self.cfg.chunks_per_update
+        if self.phase == "bt" or not self.cfg.enable_gating:
+            b = self.hold[snd].astype(np.int64)
+            o = np.full(len(snd), K, dtype=np.int64)
+        else:
+            _, _, gated = self.owner_windows()
+            o = np.where(gated[snd], 0, self.cfg.owner_throttle)
+            o = o.astype(np.int64)
+            b = self.nonowner[snd].astype(np.int64) + o
 
         self.have[rcv, chk] = True
         np.add.at(self.replicas, chk, 1)
@@ -187,6 +289,7 @@ class SwarmState:
         np.add.at(self.nonowner, rcv[owner_mask], 1)
         if owner_mask.any():
             self.any_nonowner = True
+        self._win_cache = None    # gating state changed mid-slot
 
         self.log.append(self.slot, snd, rcv, chk, b, o, phase_code)
         cnt = len(snd)

@@ -54,6 +54,11 @@ class SwarmConfig:
     enable_nonowner_first: bool = True
 
     scheduler: str = "greedy_fastest_first"
+    # Slot-engine implementation: "batched" resolves the per-slot
+    # assignment with vectorized budgeted rounds over all receivers at
+    # once (paper-scale swarms); "loop" is the reference per-receiver
+    # engine the batched one is equivalence-tested against.
+    scheduler_impl: str = "batched"
     seed: int = 0
     # Large-n performance knob: cap the per-slot candidate-chunk set
     # to the ``cand_cap`` rarest replicated chunks (0 = exact).  The

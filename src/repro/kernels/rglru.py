@@ -42,8 +42,11 @@ def _rglru_kernel(x_ref, a_ref, g_ref, h0_ref, y_ref, hT_ref, h_scr, *,
     def step(i, h):
         h = (jax.lax.dynamic_slice_in_dim(a, i, 1, axis=0)[0] * h
              + jax.lax.dynamic_slice_in_dim(inp, i, 1, axis=0)[0])
-        pl.store(y_ref, (0, pl.dslice(i, 1), slice(None)),
-                 h[None].astype(y_ref.dtype))
+        # All indices must be slices: a raw scalar (the leading 0) makes
+        # pl.store's discharge rule crash on jax 0.4.x ("'int' object
+        # has no attribute 'shape'").
+        pl.store(y_ref, (pl.dslice(0, 1), pl.dslice(i, 1), slice(None)),
+                 h[None, None].astype(y_ref.dtype))
         return h
 
     h = jax.lax.fori_loop(0, block_t, step, h_scr[...])

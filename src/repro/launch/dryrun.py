@@ -91,7 +91,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
     compile_s = time.time() - t0
 
     mem = _mem_fields(compiled.memory_analysis())
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_analysis.xla_cost_analysis(compiled)
     txt = compiled.as_text()
     costs = hlo_analysis.analyze(txt)
     mf = model_flops(cfg, shape)

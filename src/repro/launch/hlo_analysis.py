@@ -55,6 +55,21 @@ _COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter",
                 "all-reduce-start", "collective-permute-start",
                 "ragged-all-to-all"}
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a per-device LIST of dicts (one entry per
+    partition); newer jax returns the dict directly.  Indexing the list
+    like a dict raises ``TypeError: list indices must be integers``.
+    """
+    ca = compiled.cost_analysis()
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if len(ca) else {}
+    return dict(ca)
+
+
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 # type string may be a tuple containing /*index=N*/ comments; match the
 # opcode as the first bare token followed by '(' after the '=' sign.

@@ -14,22 +14,20 @@ general P.
 """
 from __future__ import annotations
 
-import jax
+from repro.sharding.api import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False, n_pods: int = 2):
     shape = (n_pods, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     """Tiny mesh over however many devices this host has (tests)."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes,
+                     axis_types=(AxisType.Auto,) * len(axes))
 
 
 def pod_axis_size(mesh) -> int:

@@ -22,6 +22,8 @@ which is what makes elastic re-meshing across FL rounds possible.
 from __future__ import annotations
 
 import contextlib
+import enum
+import inspect
 import re
 import threading
 from typing import Optional, Sequence
@@ -32,6 +34,39 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 _CTX = threading.local()
+
+# --- jax-version compat -----------------------------------------------
+# ``jax.sharding.AxisType`` (and ``jax.make_mesh(..., axis_types=...)``)
+# only exist on newer jax; 0.4.x has neither.  Export a stand-in enum
+# and a mesh constructor that forwards axis_types when supported so the
+# launcher and tests build meshes identically on both.
+try:
+    AxisType = jax.sharding.AxisType
+    _HAS_AXIS_TYPES = True
+except AttributeError:
+    class AxisType(enum.Enum):          # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+    _HAS_AXIS_TYPES = False
+
+
+# Probe once whether jax.make_mesh takes axis_types — catching
+# TypeError per call would also swallow genuine caller bugs.
+try:
+    _MESH_TAKES_AXIS_TYPES = (
+        "axis_types" in inspect.signature(jax.make_mesh).parameters)
+except (TypeError, ValueError):
+    _MESH_TAKES_AXIS_TYPES = False
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` with a guarded ``axis_types`` forward."""
+    kw = {} if devices is None else {"devices": devices}
+    if _HAS_AXIS_TYPES and _MESH_TAKES_AXIS_TYPES and axis_types is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=axis_types, **kw)
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
 
 # ZeRO/FSDP sharding applies only to params with at least this many
 # elements (2M ~ a 1448^2 matrix); smaller tensors replicate.

@@ -7,7 +7,55 @@ loosen mixing but never beat the gating cap.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    # Seeded-sweep fallback so the Eq. (1) empirical checks still run
+    # where hypothesis isn't installed: each strategy draws from a
+    # deterministic rng and @given parametrizes over N joint samples.
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _St:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda r: int(r.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda r: float(lo + (hi - lo) * r.random()))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda r: seq[int(r.integers(len(seq)))])
+
+    st = _St()
+
+    def given(**strategies):
+        def deco(fn):
+            # crc32, not hash(): PYTHONHASHSEED would make the sweep
+            # non-reproducible across runs
+            import zlib
+            rng = np.random.default_rng(zlib.crc32(fn.__name__.encode()))
+            # 10 cases matches the tightest @settings(max_examples=10)
+            # in this module (the shim's settings() is a no-op, so the
+            # sweep size must respect the heaviest test's budget).
+            cases = [
+                {k: s.draw(rng) for k, s in strategies.items()}
+                for _ in range(10)
+            ]
+            @pytest.mark.parametrize("kw", cases)
+            def wrapper(kw):
+                fn(**kw)
+            wrapper.__name__ = fn.__name__
+            return wrapper
+        return deco
+
+    def settings(**kw):
+        return lambda fn: fn
 
 from repro.core import SwarmConfig, simulate_round
 from repro.core import privacy
