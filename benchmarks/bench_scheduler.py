@@ -10,14 +10,13 @@ Measures
    is timed), including the Table III n=500 / K=206 configuration,
    which must complete its warm-up phase.
 
-Emits ``BENCH_scheduler.json`` (repo root + results/bench/).
+Emits ``results/bench/BENCH_scheduler.json``.
 
 Usage:  python benchmarks/bench_scheduler.py [--quick]
 """
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -28,8 +27,6 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 from common import banner, save  # noqa: E402
 from repro.core import SwarmConfig, simulate_round  # noqa: E402
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _round(cfg: SwarmConfig, bt_mode: str = "auto"):
@@ -125,10 +122,7 @@ def main():
     payload["speedup_target_met"] = ok
 
     path = save("BENCH_scheduler", payload)
-    root_path = os.path.join(ROOT, "BENCH_scheduler.json")
-    with open(root_path, "w") as f:
-        json.dump(payload, f, indent=1)
-    print(f"\nwrote {path}\nwrote {root_path}")
+    print(f"\nwrote {path}")
     print(f"speedup {payload['headline_n100_k64']['speedup']}x "
           f"(target >=5x: {'OK' if ok else 'MISS'}); "
           f"n500 warm-up completed: "

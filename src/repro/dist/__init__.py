@@ -1,0 +1,14 @@
+"""Multi-device collective layer: the torrent ring + the FL step.
+
+``torrent.py``  — ``torrent_fedavg``: the paper's chunked dissemination
+schedule as an explicit block-wise ``ppermute`` ring over the ``pod``
+mesh axis, followed by on-pod masked FedAvg.
+
+``fl_step.py``  — ``make_fl_train_step`` / ``make_serve_step``: the
+pod-masked FL training step (per-pod local gradients -> torrent
+dissemination -> masked FedAvg -> AdamW) and the decode serving step.
+"""
+from .fl_step import make_fl_train_step, make_serve_step
+from .torrent import torrent_fedavg
+
+__all__ = ["torrent_fedavg", "make_fl_train_step", "make_serve_step"]

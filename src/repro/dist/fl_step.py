@@ -1,0 +1,149 @@
+"""Pod-masked FL training step and the decode serving step.
+
+``make_fl_train_step`` builds the round step the paper's system runs on
+a multi-pod mesh (§III):
+
+    1. every pod computes the gradient of ITS batch shard locally
+       (vmap over the leading pod axis; within a pod the batch is
+       data-parallel over the ``data`` mesh axis),
+    2. the per-pod gradients are disseminated with the torrent ring
+       (``torrent_fedavg`` — explicit block-wise ppermute schedule),
+    3. the masked FedAvg aggregate drives ONE AdamW update, identical
+       on every pod.
+
+Fault tolerance is a mask, never a blocked collective: a straggler pod
+(``active[p] == 0``) still participates in the fixed ring schedule, but
+its contribution is multiplied by exactly 0.0 — its batch provably
+cannot influence the result, and no peer waits on it beyond the
+constant P-1 stages.  With full participation and equal weights the
+step is bit-close to plain data-parallel SGD (the FedAvg of per-pod
+mean gradients IS the global mean gradient).
+
+``n_pods == 1`` folds the pod axis into the batch and runs plain DP
+SGD — the degenerate ring (P-1 = 0 stages) with no collective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.torrent import masked_weights, torrent_fedavg
+from repro.models import decode_step, train_loss
+from repro.optim import adamw_update
+from repro.sharding.api import DEFAULT_RULES, axis_rules
+
+
+def _microbatched_value_and_grad(loss_fn, params, inp, lab,
+                                 microbatch: int):
+    """d loss / d params, accumulated over microbatches when enabled.
+
+    ``loss_fn(params, inputs, labels)``; the local batch dim is split
+    into ``b // microbatch`` scan steps so activation memory scales
+    with the microbatch, not the batch.
+    """
+    vg = jax.value_and_grad(loss_fn)
+    b = inp.shape[0]
+    if microbatch <= 0 or b <= microbatch:
+        return vg(params, inp, lab)
+    if b % microbatch:
+        raise ValueError(f"local batch {b} is not divisible by "
+                         f"microbatch {microbatch}; the split would "
+                         "silently fall back to full-batch memory")
+    nmb = b // microbatch
+    ib = inp.reshape((nmb, microbatch) + inp.shape[1:])
+    lb = lab.reshape((nmb, microbatch) + lab.shape[1:])
+
+    def one(carry, xy):
+        loss, grads = vg(params, xy[0], xy[1])
+        acc_l, acc_g = carry
+        acc_g = jax.tree_util.tree_map(
+            lambda a, g: a + g.astype(jnp.float32), acc_g, grads)
+        return (acc_l + loss, acc_g), None
+
+    zeros = jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(one, (jnp.zeros((), jnp.float32),
+                                          zeros), (ib, lb))
+    scale = 1.0 / nmb
+    return loss * scale, jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+
+def make_fl_train_step(cfg, mesh, *, lr_schedule, n_pods: int,
+                       rules=None, torrent_blocks: int = 4,
+                       compress: bool = False, microbatch: int = 0,
+                       ce_chunk: int = 512):
+    """Returns step(params, opt, batch, weights, active) ->
+    (params, opt, {"loss", "lr"}).
+
+    batch: {"inputs": (n_pods, B_local, T[, D]), "labels": (...)} —
+    the leading axis is the pod (FL client) axis; weights/active are
+    (n_pods,) FedAvg weights and the round's participation mask.
+    """
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    has_pod_axis = (mesh is not None and "pod" in mesh.axis_names
+                    and n_pods > 1)
+
+    def step(params, opt, batch, weights, active):
+        with axis_rules(rules, mesh):
+            def loss_fn(p, x, y):
+                return train_loss(cfg, p, x, y, ce_chunk=ce_chunk)
+
+            if n_pods <= 1:
+                inp = batch["inputs"].reshape(
+                    (-1,) + batch["inputs"].shape[2:])
+                lab = batch["labels"].reshape(
+                    (-1,) + batch["labels"].shape[2:])
+                loss, agg = _microbatched_value_and_grad(
+                    loss_fn, params, inp, lab, microbatch)
+            else:
+                def pod_grads(inp, lab):
+                    return _microbatched_value_and_grad(
+                        loss_fn, params, inp, lab, microbatch)
+
+                losses, grads = jax.vmap(pod_grads)(
+                    batch["inputs"], batch["labels"])
+                if has_pod_axis:
+                    # per-pod grads live on their pod (leading axis
+                    # sharded); the ring is the only cross-pod traffic
+                    grads = jax.tree_util.tree_map(
+                        lambda g: jax.lax.with_sharding_constraint(
+                            g, NamedSharding(mesh, P("pod"))), grads)
+                agg = torrent_fedavg(
+                    grads, weights, active,
+                    mesh=mesh if has_pod_axis else None,
+                    n_blocks=torrent_blocks, compress=compress)
+                wn = masked_weights(weights, active)
+                # select (don't multiply): a pod masked because it
+                # diverged reports a NaN loss, and 0 * NaN == NaN
+                loss = jnp.sum(jnp.where(
+                    wn > 0, losses.astype(jnp.float32), 0.0) * wn)
+            lr = lr_schedule(opt.step)
+            new_params, new_opt = adamw_update(agg, opt, params, lr=lr)
+            if n_pods > 1:
+                # A round with zero active mass is a protocol no-op:
+                # params, moments, and the step counter stay untouched
+                # (zero grads would still apply weight decay and
+                # advance the LR schedule).  Same zero-mass definition
+                # as the aggregator's, so they cannot drift.
+                has_mass = jnp.any(wn > 0)
+                pick = lambda new, old: jnp.where(has_mass, new, old)
+                new_params = jax.tree_util.tree_map(pick, new_params,
+                                                    params)
+                new_opt = jax.tree_util.tree_map(pick, new_opt, opt)
+        return new_params, new_opt, {"loss": loss, "lr": lr}
+
+    return step
+
+
+def make_serve_step(cfg):
+    """Returns serve(params, caches, tokens, pos) ->
+    (next_tokens, logits, new_caches) — one greedy decode step."""
+
+    def serve(params, caches, tokens, pos):
+        logits, new_caches = decode_step(cfg, params, caches, tokens, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, new_caches
+
+    return serve

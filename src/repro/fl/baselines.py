@@ -42,7 +42,11 @@ def metropolis_weights(adj: np.ndarray) -> np.ndarray:
 
 
 def gossip_mix(client_params: list, w: np.ndarray):
-    """One gossip round: x_i <- sum_j W_ij x_j (mix-and-forward)."""
+    """One gossip round: x_i <- sum_j W_ij x_j (mix-and-forward).
+
+    The mix acts on the *post-local-update* params (local step first,
+    then gossip — Koloskova et al. 2019) with the Metropolis matrix.
+    """
     wj = jnp.asarray(w, jnp.float32)
 
     def combine(*leaves):
@@ -53,3 +57,21 @@ def gossip_mix(client_params: list, w: np.ndarray):
     # Unstack back into per-client pytrees.
     n = w.shape[0]
     return [jax.tree_util.tree_map(lambda l: l[i], mixed) for i in range(n)]
+
+
+def gossip_eval(apply_fn, client_params: list, x, y) -> float:
+    """GossipDFL round accuracy: mean of the per-client accuracies.
+
+    Each client only holds its own partially-mixed model, so that is
+    what gets evaluated.  Evaluating the client-MEAN model instead (the
+    previous behavior) is wrong for this baseline: the Metropolis matrix
+    is doubly stochastic, so mean_i(sum_j W_ij x_j) == mean_j(x_j) — the
+    metric is invariant to the mix and silently reports an exact
+    *uniform FedAvg* that no gossip node possesses.  That phantom
+    averaging beat exact weighted FedAvg at round 0 under dir(0.1)
+    heterogeneity, inverting the attenuation the baseline exists to
+    show (§V-B).
+    """
+    from .models_small import accuracy
+    return float(np.mean([accuracy(apply_fn, p, x, y)
+                          for p in client_params]))

@@ -90,10 +90,11 @@ def run_experiment(method: str, cfg: FLConfig) -> FLResult:
                                  rng=np.random.default_rng((cfg.seed, r)))
             w = baselines.metropolis_weights(adj)
             client_params = baselines.gossip_mix(outs, w)
-            # Evaluate the average model (standard DFL reporting).
-            mean_params = jax.tree_util.tree_map(
-                lambda *ls: jnp.mean(jnp.stack(ls), 0), *client_params)
-            accs.append(accuracy(apply_fn, mean_params, test.x, test.y))
+            # Evaluate what clients actually hold: each its own
+            # partially-mixed model (see baselines.gossip_eval for why
+            # the mean-model metric is a phantom exact FedAvg).
+            accs.append(baselines.gossip_eval(
+                apply_fn, client_params, test.x, test.y))
         return FLResult(accs)
 
     if method == "fltorrent":

@@ -32,13 +32,38 @@ def _fedavg_kernel(w_ref, u_ref, o_ref):
         preferred_element_type=jnp.float32).astype(o_ref.dtype)
 
 
+def masked_normalized_weights(weights: jnp.ndarray,
+                              active: jnp.ndarray) -> jnp.ndarray:
+    """FedAvg weights w_u m_u / sum w_u m_u, (n,) f32.
+
+    Zero active mass (every client masked / weightless) yields zeros,
+    never 0/0 NaN.  Single implementation shared by the Pallas kernel,
+    the jnp oracle (ref.py), and the torrent ring (dist/torrent.py).
+    """
+    w = weights.astype(jnp.float32) * active.astype(jnp.float32)
+    total = jnp.sum(w)
+    return jnp.where(total > 0, w / jnp.maximum(total, 1e-12),
+                     jnp.zeros_like(w))
+
+
+def mask_inactive_rows(updates: jnp.ndarray, wn: jnp.ndarray) -> jnp.ndarray:
+    """Select-out rows with zero weight BEFORE the weighted reduction.
+
+    A masked client's update may be the *reason* it was masked (diverged
+    local step -> inf/NaN grads); 0 * NaN == NaN would poison the
+    aggregate, so zero-weight rows are replaced, not multiplied.
+    """
+    return jnp.where((wn > 0)[:, None], updates,
+                     jnp.zeros_like(updates))
+
+
 def fedavg_reduce(updates: jnp.ndarray, weights: jnp.ndarray,
                   active: jnp.ndarray, *, block_d: int = 2048,
                   interpret: bool = False) -> jnp.ndarray:
     """updates (n, D); weights (n,); active (n,) -> (D,) FedAvg."""
     n, d = updates.shape
-    w = weights.astype(jnp.float32) * active.astype(jnp.float32)
-    w = w / jnp.maximum(w.sum(), 1e-12)              # normalize outside
+    w = masked_normalized_weights(weights, active)
+    updates = mask_inactive_rows(updates, w)
     block_d = min(block_d, d)
     pad_n = (-n) % 8
     pad_d = (-d) % block_d

@@ -11,6 +11,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .fedavg import mask_inactive_rows, masked_normalized_weights
+
 NEG_INF = -1e30
 
 
@@ -105,10 +107,9 @@ def fedavg_reduce(updates: jnp.ndarray, weights: jnp.ndarray,
     aggregation weights (sample counts); active: (n,) bool/float mask
     (A_v^r membership).  Returns (D,) = sum_u m_u w_u x_u / sum_u m_u w_u.
     """
-    w = (weights.astype(jnp.float32) * active.astype(jnp.float32))
-    denom = jnp.maximum(w.sum(), 1e-12)
-    return (jnp.einsum("n,nd->d", w, updates.astype(jnp.float32))
-            / denom).astype(updates.dtype)
+    wn = masked_normalized_weights(weights, active)
+    masked = mask_inactive_rows(updates.astype(jnp.float32), wn)
+    return jnp.einsum("n,nd->d", wn, masked).astype(updates.dtype)
 
 
 # ----------------------------------------------------------------------

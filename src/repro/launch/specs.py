@@ -133,7 +133,7 @@ def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
         step = make_fl_train_step(
             cfg, mesh, lr_schedule=linear_warmup_cosine(3e-4, 100, 10000),
             n_pods=n_pods, rules=rules, torrent_blocks=torrent_blocks,
-            compress=compress, microbatch=microbatch)
+            compress=compress, microbatch=microbatch, ce_chunk=ce_chunk)
         args = (params_sh, opt_sh,
                 {"inputs": inp, "labels": lab},
                 jax.ShapeDtypeStruct((n_pods,), jnp.float32),

@@ -68,6 +68,30 @@ def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
                              axis_types=axis_types, **kw)
     return jax.make_mesh(axis_shapes, axis_names, **kw)
 
+
+def shard_map(f, mesh, *, in_specs, out_specs, axis_names=None,
+              check_rep: bool = True):
+    """``shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., axis_names=..., check_vma=)``;
+    0.4.x has ``jax.experimental.shard_map.shard_map(..., auto=...,
+    check_rep=)``.  ``axis_names`` is the set of mesh axes the body is
+    *manual* over (None = all of them); the complement is forwarded as
+    ``auto`` on old jax.  ``check_rep=False`` maps to ``check_vma=False``;
+    the default mirrors jax's own (checking on).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check_rep}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = (frozenset(mesh.axis_names) - frozenset(axis_names)
+            if axis_names is not None else frozenset())
+    return _shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_rep, auto=auto)
+
 # ZeRO/FSDP sharding applies only to params with at least this many
 # elements (2M ~ a 1448^2 matrix); smaller tensors replicate.
 ZERO_MIN_ELEMS = 2 ** 21

@@ -11,6 +11,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.dist     # deselect with `-m "not dist"`
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -1,0 +1,213 @@
+"""Single-device numerics for the repro.dist collective layer.
+
+The 8-device subprocess harness (test_dist_multidevice.py) proves the
+lowered collective schedule; these tests exercise the same ring
+arithmetic through the single-device emulation path so dist numerics
+run in tier-1 on one CPU device.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.torrent import (masked_weights, ring_allgather_emulated,
+                                torrent_fedavg)
+from repro.kernels import ops, ref
+
+
+def _oracle(ups, weights, active):
+    wa = np.asarray(weights, np.float64) * np.asarray(active, np.float64)
+    wn = wa / wa.sum() if wa.sum() > 0 else wa
+    return jax.tree_util.tree_map(
+        lambda l: np.einsum("p,p...->...", wn, np.asarray(l, np.float64)),
+        ups)
+
+
+def _tree():
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    return {
+        "layer": {"w": jax.random.normal(ks[0], (4, 16, 8)),
+                  "b": jax.random.normal(ks[1], (4, 24))},
+        "head": jax.random.normal(ks[2], (4, 7, 3, 2)),
+        "scale": jax.random.normal(ks[3], (4,)),       # scalar per pod
+    }
+
+
+def test_torrent_fedavg_matches_oracle_single_device():
+    ups = _tree()
+    weights = jnp.array([1., 2., 3., 4.])
+    active = jnp.array([1., 1., 0., 1.])
+    out = torrent_fedavg(ups, weights, active, n_blocks=4)
+    want = _oracle(ups, weights, active)
+    for got, ref_ in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(got), ref_, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_blocks", [1, 3, 8])
+def test_torrent_fedavg_n_blocks_invariant(n_blocks):
+    """The chunking is a wire layout, not a math change."""
+    ups = _tree()
+    weights = jnp.array([3., 1., 2., 5.])
+    active = jnp.ones(4)
+    out = torrent_fedavg(ups, weights, active, n_blocks=n_blocks)
+    want = _oracle(ups, weights, active)
+    for got, ref_ in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(got), ref_, atol=1e-5)
+
+
+def test_torrent_fedavg_pytree_structure():
+    """Mixed-rank pytree in -> same treedef out, leading axis dropped,
+    leaf dtypes preserved."""
+    ups = _tree()
+    ups["layer"]["b"] = ups["layer"]["b"].astype(jnp.bfloat16)
+    out = torrent_fedavg(ups, jnp.ones(4), jnp.ones(4), n_blocks=2)
+    assert (jax.tree_util.tree_structure(out)
+            == jax.tree_util.tree_structure(ups))
+    flat_in = jax.tree_util.tree_leaves(ups)
+    flat_out = jax.tree_util.tree_leaves(out)
+    for i, o in zip(flat_in, flat_out):
+        assert o.shape == i.shape[1:]
+        assert o.dtype == i.dtype
+
+
+def test_torrent_fedavg_compress_small_relative_error():
+    ups = _tree()
+    weights = jnp.array([1., 2., 3., 4.])
+    active = jnp.array([1., 1., 0., 1.])
+    out = torrent_fedavg(ups, weights, active, n_blocks=4, compress=True)
+    want = _oracle(ups, weights, active)
+    for got, ref_ in zip(jax.tree_util.tree_leaves(out),
+                         jax.tree_util.tree_leaves(want)):
+        rel = (np.abs(np.asarray(got, np.float64) - ref_).max()
+               / max(np.abs(ref_).max(), 1e-9))
+        assert rel < 0.02, rel
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_ring_emulation_every_dest_reconstructs_all(compress):
+    """After P-1 stages every dest holds every source's blocks in
+    source order — the paper's full-dissemination terminal state."""
+    p, nb, db = 5, 3, 16
+    blocks = jax.random.normal(jax.random.PRNGKey(1), (p, nb, db))
+    gathered = ring_allgather_emulated(blocks, compress=compress)
+    assert gathered.shape == (p, p, nb, db)
+    tol = 2e-2 if compress else 1e-6
+    for dest in range(p):
+        np.testing.assert_allclose(np.asarray(gathered[dest]),
+                                   np.asarray(gathered[0]), atol=1e-7)
+        np.testing.assert_allclose(np.asarray(gathered[dest]),
+                                   np.asarray(blocks), atol=tol)
+
+
+def test_zero_active_mass_returns_zeros():
+    """sum(m*w) == 0 -> zeros everywhere, never NaN (regression)."""
+    ups = _tree()
+    zero = jnp.zeros(4)
+    out = torrent_fedavg(ups, jnp.array([1., 2., 3., 4.]), zero)
+    for l in jax.tree_util.tree_leaves(out):
+        assert not np.isnan(np.asarray(l, np.float32)).any()
+        np.testing.assert_array_equal(np.asarray(l, np.float32), 0.0)
+    # also with nonzero mask but zero weights
+    out2 = torrent_fedavg(ups, zero, jnp.ones(4))
+    for l in jax.tree_util.tree_leaves(out2):
+        np.testing.assert_array_equal(np.asarray(l, np.float32), 0.0)
+    np.testing.assert_array_equal(np.asarray(masked_weights(zero, zero)),
+                                  np.zeros(4))
+
+
+def test_fl_step_single_device_straggler_and_microbatch():
+    """The full FL step runs through the emulated ring on one device:
+    a masked pod cannot influence params, and microbatch accumulation
+    matches the unsplit gradient."""
+    from repro.dist.fl_step import make_fl_train_step
+    from repro.models import ArchConfig, init_params
+    from repro.optim import adamw_init
+    from repro.optim.schedules import constant_lr
+
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=32,
+                     n_heads=4, n_kv=2, head_dim=8, d_ff=64, vocab=128,
+                     dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt = adamw_init(params)
+    batch = {"inputs": jax.random.randint(key, (4, 4, 16), 0, 128),
+             "labels": jax.random.randint(key, (4, 4, 16), 0, 128)}
+    w = jnp.ones(4)
+    a = jnp.array([1., 1., 1., 0.])
+    step = make_fl_train_step(cfg, None, lr_schedule=constant_lr(1e-3),
+                              n_pods=4)
+    p_ref, _, m = jax.jit(step)(params, opt, batch, w, a)
+    assert np.isfinite(float(m["loss"]))
+    corrupted = dict(batch)
+    corrupted["inputs"] = batch["inputs"].at[3].set(0)
+    p_alt, _, _ = jax.jit(step)(params, opt, corrupted, w, a)
+    for x, y in zip(jax.tree_util.tree_leaves(p_ref),
+                    jax.tree_util.tree_leaves(p_alt)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    step_mb = make_fl_train_step(cfg, None, lr_schedule=constant_lr(1e-3),
+                                 n_pods=4, microbatch=2)
+    p_mb, _, _ = jax.jit(step_mb)(params, opt, batch, w, a)
+    diff = max(float(jnp.abs(x - y).max()) for x, y in zip(
+        jax.tree_util.tree_leaves(p_ref), jax.tree_util.tree_leaves(p_mb)))
+    assert diff < 1e-5, diff
+
+
+def test_fedavg_reduce_zero_mass_kernel_and_ref():
+    u = jnp.asarray(np.random.default_rng(0).normal(size=(4, 96)),
+                    jnp.float32)
+    w = jnp.array([1., 2., 3., 4.])
+    zero = jnp.zeros(4)
+    for out in (ref.fedavg_reduce(u, w, zero),
+                ops.fedavg(u, w, zero, impl="interpret", block_d=32)):
+        assert not np.isnan(np.asarray(out)).any()
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_masked_nan_update_cannot_poison_aggregate():
+    """A pod masked BECAUSE it diverged (NaN update) must be selected
+    out, not multiplied (0 * NaN == NaN) — regression."""
+    ups = _tree()
+    ups = jax.tree_util.tree_map(
+        lambda l: l.at[2].set(jnp.nan), ups)
+    weights = jnp.array([1., 2., 3., 4.])
+    active = jnp.array([1., 1., 0., 1.])
+    for compress in (False, True):
+        out = torrent_fedavg(ups, weights, active, n_blocks=4,
+                             compress=compress)
+        for l in jax.tree_util.tree_leaves(out):
+            assert np.isfinite(np.asarray(l, np.float32)).all()
+    # and through the stacked kernels
+    u = jnp.ones((4, 64)).at[2].set(jnp.nan)
+    for out in (ref.fedavg_reduce(u, weights, active),
+                ops.fedavg(u, weights, active, impl="interpret",
+                           block_d=32)):
+        assert np.isfinite(np.asarray(out)).all()
+
+
+def test_fl_step_zero_active_mass_is_noop():
+    """No reconstructable update by the deadline -> the round leaves
+    params, optimizer moments, AND the step counter untouched."""
+    from repro.dist.fl_step import make_fl_train_step
+    from repro.models import ArchConfig, init_params
+    from repro.optim import adamw_init
+    from repro.optim.schedules import constant_lr
+
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=32,
+                     n_heads=4, n_kv=2, head_dim=8, d_ff=64, vocab=128,
+                     dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt = adamw_init(params)
+    batch = {"inputs": jax.random.randint(key, (4, 2, 8), 0, 128),
+             "labels": jax.random.randint(key, (4, 2, 8), 0, 128)}
+    step = make_fl_train_step(cfg, None, lr_schedule=constant_lr(1e-3),
+                              n_pods=4)
+    p2, o2, _ = jax.jit(step)(params, opt, batch, jnp.ones(4),
+                              jnp.zeros(4))
+    for x, y in zip(jax.tree_util.tree_leaves((params, opt)),
+                    jax.tree_util.tree_leaves((p2, o2))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
