@@ -1,0 +1,144 @@
+"""SwarmSession microbenchmark: multi-round throughput under churn.
+
+Measures
+
+1. **Rounds/sec and warm-up share vs churn rate** at n in {100, 200}
+   (K=64, fluid BT so the session layer + scheduler are what's timed):
+   the persistent-population path must not get slower as churn rises —
+   incremental edge repair touches O(churned peers), not O(n).
+2. **Re-mesh latency** — ``ElasticFLStep`` cost of rebuilding mesh +
+   ring schedule + jit when the active pod count changes (first call at
+   a new P), vs the cached-revisit cost.
+
+Emits ``results/bench/BENCH_session.json``.
+
+Usage:  python benchmarks/bench_session.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import numpy as np  # noqa: E402
+
+from common import banner, save  # noqa: E402
+from repro.core import ChurnModel, SwarmConfig, SwarmSession  # noqa: E402
+
+
+def churn_sweep(sizes, churn_rates, rounds: int):
+    rows = []
+    for n in sizes:
+        for cr in churn_rates:
+            cfg = SwarmConfig(n=n, chunks_per_update=64, s_max=100_000,
+                              seed=0)
+            ses = SwarmSession(cfg, churn=ChurnModel(
+                leave_prob=cr, join_rate=cr * n / 4, rejoin_after=2),
+                bt_mode="fluid")
+            t0 = time.time()
+            recs = ses.run(rounds)
+            dt = time.time() - t0
+            shares = [r.result.metrics.warmup_share for r in recs]
+            row = {
+                "n": n, "churn_rate": cr, "rounds": rounds,
+                "seconds": round(dt, 2),
+                "rounds_per_sec": round(rounds / max(dt, 1e-9), 3),
+                "warmup_share_mean": round(float(np.mean(shares)), 4),
+                "participation_mean": round(
+                    float(ses.participation().mean()), 4),
+                "edge_persistence": round(ses.edge_persistence(), 4),
+                "failed_open_rounds": sum(
+                    r.result.metrics.failed_open for r in recs),
+            }
+            rows.append(row)
+            print(f"  n={n:4d} churn={cr:4.2f}: "
+                  f"{row['rounds_per_sec']:6.2f} rounds/s  "
+                  f"warm_share={row['warmup_share_mean']}  "
+                  f"particip={row['participation_mean']}  "
+                  f"persist={row['edge_persistence']}", flush=True)
+    return rows
+
+
+def remesh_latency():
+    """ElasticFLStep rebuild cost per distinct pod count (trace + jit
+    + first execution) vs a cached revisit."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist.fl_step import ElasticFLStep
+    from repro.models import ArchConfig, init_params
+    from repro.optim import adamw_init
+    from repro.optim.schedules import constant_lr
+
+    cfg = ArchConfig(name="bench", family="dense", n_layers=2,
+                     d_model=64, n_heads=4, n_kv=2, head_dim=16,
+                     d_ff=128, vocab=128, dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = ElasticFLStep(cfg, lr_schedule=constant_lr(1e-3),
+                         mesh_factory=lambda p: None)
+    rng = np.random.default_rng(0)
+
+    def batch(p):
+        x = rng.integers(0, 128, size=(p, 2, 16))
+        return {"inputs": jnp.asarray(x, jnp.int32),
+                "labels": jnp.asarray(x, jnp.int32)}
+
+    out = {}
+    for label, p in (("build_p4", 4), ("remesh_p3", 3),
+                     ("revisit_p4", 4)):
+        t0 = time.perf_counter()
+        params, opt, m = step(params, opt, batch(p), jnp.ones(p),
+                              jnp.ones(p))
+        jax.tree_util.tree_map(lambda x: x.block_until_ready(), m)
+        out[label + "_ms"] = round((time.perf_counter() - t0) * 1e3, 2)
+        print(f"  {label:11s} (P={p}): {out[label + '_ms']:8.1f} ms",
+              flush=True)
+    return out
+
+
+def run(fast: bool = True):
+    payload = {"bench": "session",
+               "date": time.strftime("%Y-%m-%d %H:%M:%S")}
+
+    banner("SwarmSession rounds/sec + warm-up share vs churn rate")
+    sizes = (100,) if fast else (100, 200)
+    churn_rates = (0.0, 0.1) if fast else (0.0, 0.05, 0.1, 0.2)
+    payload["churn_sweep"] = churn_sweep(sizes, churn_rates,
+                                         rounds=3 if fast else 5)
+
+    banner("Elastic re-mesh latency (mesh + ring schedule + jit)")
+    payload["remesh"] = remesh_latency()
+
+    # Churn must not break warm-up liveness or throughput collapse.
+    payload["no_failed_open"] = all(
+        r["failed_open_rounds"] == 0 for r in payload["churn_sweep"])
+    base = {r["n"]: r["rounds_per_sec"]
+            for r in payload["churn_sweep"] if r["churn_rate"] == 0.0}
+    payload["churn_slowdown_ok"] = all(
+        r["rounds_per_sec"] >= 0.3 * base[r["n"]]
+        for r in payload["churn_sweep"])
+
+    path = save("BENCH_session", payload)
+    print(f"\nwrote {path}")
+    print(f"no_failed_open: {payload['no_failed_open']}; "
+          f"churn_slowdown_ok (>=0.3x zero-churn): "
+          f"{payload['churn_slowdown_ok']}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="n=100 only, fewer churn rates")
+    args = ap.parse_args()
+    run(fast=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,9 @@ Public API:
 
 * ``SwarmConfig`` / ``simulate_round`` — one privacy-hardened
   dissemination round (spray -> warm-up -> BitTorrent -> deadline).
+* ``SwarmSession`` / ``ChurnModel`` — the persistent multi-round swarm:
+  cross-round churn (leave/join/rejoin at round boundaries), evolving
+  overlay with incremental edge repair, capacity persistence (§III-E).
 * ``schedulers`` — RandomFIFO / RandomFastestFirst / GreedyFastestFirst /
   distributed / flooding (+ max-flow stage upper bound).
 * ``privacy`` — Eq. (1)-(5) unlinkability bounds + empirical checks.
@@ -14,13 +17,15 @@ Public API:
 """
 from . import (aggregation, attacks, audit, bittorrent, byzantine,
                capacities, chunking, maxflow, overlay, privacy,
-               schedulers, simulator, state, types)
+               schedulers, session, simulator, state, types)
+from .session import ChurnModel, SessionRound, SwarmSession
 from .simulator import RoundResult, RoundSimulator, simulate_round
 from .types import RoundMetrics, SwarmConfig
 
 __all__ = [
     "SwarmConfig", "RoundMetrics", "RoundSimulator", "RoundResult",
+    "SwarmSession", "ChurnModel", "SessionRound",
     "simulate_round", "aggregation", "attacks", "audit", "bittorrent",
     "byzantine", "capacities", "chunking", "maxflow", "overlay",
-    "privacy", "schedulers", "simulator", "state", "types",
+    "privacy", "schedulers", "session", "simulator", "state", "types",
 ]

@@ -1,0 +1,401 @@
+"""SwarmSession: a persistent multi-round swarm with cross-round churn.
+
+The paper's §III-E semantics — clients join and leave *between* rounds,
+leavers rejoin at a later round boundary, and every round's aggregation
+proceeds over whatever active set reconstructs — need state that
+outlives a single :class:`~repro.core.simulator.RoundSimulator`.  This
+module carries that state:
+
+* a **persistent peer population** with stable global ids: capacities
+  are sampled once when a peer joins and stick for its lifetime,
+* a **churn model** applied at round boundaries: Bernoulli leaves,
+  Poisson joins of fresh peers, and planned rejoins ``rejoin_after``
+  rounds later (the paper's rejoin-at-round-boundary rule),
+* **incremental overlay evolution**: instead of re-rolling the whole
+  graph every round, edges of departed peers go dormant, joiners attach
+  with ``min_degree`` repair edges, and survivors whose active degree
+  dropped get repair edges — so cross-round attack and privacy metrics
+  (``edge_persistence``, ``pair_exposure``) can be computed against the
+  topology as it actually *evolves*, which is what topology-dependent
+  privacy bounds are a function of.
+
+Usage
+-----
+::
+
+    from repro.core import SwarmConfig
+    from repro.core.session import ChurnModel, SwarmSession
+
+    cfg = SwarmConfig(n=40, chunks_per_update=16, min_degree=5)
+    ses = SwarmSession(cfg, churn=ChurnModel(leave_prob=0.1,
+                                             join_rate=1.0,
+                                             rejoin_after=2))
+    for _ in range(10):
+        rec = ses.next_round()
+        rec.result.metrics          # RoundMetrics of this round's sub-swarm
+        rec.active_ids              # local index i <-> global peer rec.active_ids[i]
+    ses.edge_persistence()          # cross-round edge overlap in [0, 1]
+    ses.pair_exposure().max()       # most-exposed neighbor pair (rounds)
+
+Zero churn (the default, ``SwarmSession(cfg)``) reproduces today's
+per-round ``simulate_round`` loop **bit-identically**: every round
+re-rolls overlay and capacities from ``round_seed(r)`` exactly like
+``RoundSimulator(cfg.replace(seed=round_seed(r)))`` — asserted
+seed-for-seed in ``tests/test_session.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from . import capacities as cap
+from .overlay import _components, random_overlay
+from .simulator import RoundResult, RoundSimulator
+from .types import SwarmConfig
+
+
+@dataclass(frozen=True)
+class ChurnModel:
+    """Cross-round membership dynamics (paper §III-E).
+
+    ``leave_prob``  — per-active-peer Bernoulli leave probability at each
+    round boundary; ``join_rate`` — Poisson mean of *fresh* peers joining
+    per boundary; ``rejoin_after`` — a leaver rejoins at the boundary
+    this many rounds later (0 = leavers never come back).
+    """
+
+    leave_prob: float = 0.0
+    join_rate: float = 0.0
+    rejoin_after: int = 2
+
+    @property
+    def enabled(self) -> bool:
+        return self.leave_prob > 0.0 or self.join_rate > 0.0
+
+
+@dataclass
+class SessionRound:
+    """One session round: the sub-swarm result plus membership events.
+
+    ``active_ids`` maps the round simulator's local client indices to
+    stable global peer ids (``local i <-> global active_ids[i]``); all
+    event arrays hold global ids.
+    """
+
+    round_idx: int
+    active_ids: np.ndarray
+    result: RoundResult
+    joined: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    left: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
+    rejoined: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int64))
+    dropped_midround: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int64))
+
+    def global_log(self) -> dict:
+        """The round's transfer log with sender/receiver/owner re-keyed
+        to global peer ids (chunk ids stay local to the round)."""
+        log = dict(self.result.log)
+        ids = self.active_ids
+        for key in ("sender", "receiver", "owner"):
+            log[key] = ids[np.asarray(log[key], dtype=np.int64)]
+        return log
+
+
+class SwarmSession:
+    """Persistent peer population carried across FL rounds.
+
+    Parameters
+    ----------
+    cfg : SwarmConfig
+        Template round config; ``cfg.n`` is the *initial* population.
+        Each round runs with ``n`` = current active count and
+        ``seed = round_seed(r)``.
+    churn_rate : float
+        Shorthand for ``ChurnModel(leave_prob=churn_rate)`` —
+        ``churn_rate=0`` is the exact single-round-loop back-compat mode.
+    churn : ChurnModel, optional
+        Full churn spec; overrides ``churn_rate``.
+    round_seed : callable(int) -> int, optional
+        Per-round seed schedule; defaults to ``cfg.seed * 1000 + r``
+        (the convention ``fl/runner.py`` has always used).
+    evolve_overlay : bool, optional
+        Force incremental topology evolution on/off.  Default: evolve
+        exactly when churn is enabled, so the zero-churn session stays
+        bit-identical to the historical per-round re-roll.
+    """
+
+    def __init__(self, cfg: SwarmConfig, *,
+                 churn_rate: float = 0.0,
+                 churn: Optional[ChurnModel] = None,
+                 link_model: cap.LinkModel = cap.RESIDENTIAL,
+                 bt_mode: str = "auto",
+                 round_seed: Optional[Callable[[int], int]] = None,
+                 evolve_overlay: Optional[bool] = None):
+        if churn is None:
+            churn = ChurnModel(leave_prob=float(churn_rate))
+        self.cfg = cfg
+        self.churn = churn
+        self.link_model = link_model
+        self.bt_mode = bt_mode
+        self.round_seed = (round_seed if round_seed is not None
+                           else lambda r: cfg.seed * 1000 + r)
+        self.evolve = (churn.enabled if evolve_overlay is None
+                       else bool(evolve_overlay))
+        # Session-level stream (churn + overlay evolution), independent
+        # of the per-round simulator streams so adding churn never
+        # perturbs the in-round schedules of unaffected rounds.
+        self.rng = np.random.default_rng(np.random.SeedSequence(
+            [int(cfg.seed), 0x5E5510]))
+
+        self.n_peers = cfg.n
+        self.active = np.ones(cfg.n, dtype=bool)
+        self.rejoin_at = np.full(cfg.n, -1, dtype=np.int64)
+        self.round_idx = 0
+        self.history: list[SessionRound] = []
+        self._pending: Optional[tuple] = None   # begun-but-not-run round
+
+        if self.evolve:
+            self.adj = random_overlay(cfg.n, cfg.min_degree,
+                                      cfg.extra_edge_frac, self.rng)
+            self.up, self.down = link_model.sample_chunks_per_slot(
+                cfg.n, cfg.chunk_bytes, cfg.slot_seconds, self.rng)
+            self._exposure = np.zeros((cfg.n, cfg.n), dtype=np.int64)
+        else:
+            self.adj = None
+            self.up = self.down = None
+            self._exposure = None
+
+    # -- membership (round boundaries) ----------------------------------
+    @property
+    def min_active(self) -> int:
+        """Leave-clamp floor: a round needs min_degree+1 peers to mesh."""
+        return self.cfg.min_degree + 1
+
+    def _step_membership(self, r: int):
+        """Apply the churn model at the boundary before round ``r``."""
+        rejoined = np.flatnonzero(self.rejoin_at == r)
+        if rejoined.size:
+            self.active[rejoined] = True
+            self.rejoin_at[rejoined] = -1
+
+        # Bernoulli leaves over peers active before this boundary (a
+        # peer that just rejoined is exempt for one boundary).
+        candidates = np.flatnonzero(self.active)
+        candidates = np.setdiff1d(candidates, rejoined,
+                                  assume_unique=True)
+        leaving = candidates[self.rng.random(candidates.size)
+                             < self.churn.leave_prob]
+        # Clamp: never let the active count fall below the floor —
+        # a leave may shrink the collective but must never block it.
+        # (Mid-round drops may already have us below the floor, so cap
+        # the cancellation at the whole leave set.)
+        budget = int(self.active.sum()) - leaving.size - self.min_active
+        if budget < 0:
+            keep = self.rng.choice(leaving.size,
+                                   size=min(-budget, leaving.size),
+                                   replace=False)
+            leaving = np.delete(leaving, keep)
+        if leaving.size:
+            self.active[leaving] = False
+            if self.churn.rejoin_after > 0:
+                self.rejoin_at[leaving] = r + self.churn.rejoin_after
+
+        # Poisson fresh joins: new global ids, sticky capacities.
+        n_new = (int(self.rng.poisson(self.churn.join_rate))
+                 if self.churn.join_rate > 0 else 0)
+        joined = np.arange(self.n_peers, self.n_peers + n_new,
+                           dtype=np.int64)
+        if n_new:
+            self._grow(n_new)
+        newly_active = np.concatenate([rejoined, joined])
+        if self.evolve:
+            self._repair_overlay(newly_active)
+        return joined, leaving, rejoined
+
+    def _grow(self, n_new: int):
+        """Extend all per-peer arrays for ``n_new`` fresh joiners."""
+        cfg = self.cfg
+        old = self.n_peers
+        self.n_peers += n_new
+        self.active = np.concatenate(
+            [self.active, np.ones(n_new, dtype=bool)])
+        self.rejoin_at = np.concatenate(
+            [self.rejoin_at, np.full(n_new, -1, dtype=np.int64)])
+        if not self.evolve:
+            # Re-roll mode samples overlay + capacities fresh each
+            # round anyway; only the membership arrays persist.
+            return
+        u, d = self.link_model.sample_chunks_per_slot(
+            n_new, cfg.chunk_bytes, cfg.slot_seconds, self.rng)
+        self.up = np.concatenate([self.up, u])
+        self.down = np.concatenate([self.down, d])
+        adj = np.zeros((self.n_peers, self.n_peers), dtype=bool)
+        adj[:old, :old] = self.adj
+        self.adj = adj
+        exp = np.zeros((self.n_peers, self.n_peers), dtype=np.int64)
+        exp[:old, :old] = self._exposure
+        self._exposure = exp
+
+    # -- incremental overlay evolution ----------------------------------
+    def _attach(self, v: int, need: int, ids: np.ndarray):
+        """Add ``need`` edges from ``v`` to random active non-neighbors."""
+        cands = ids[~self.adj[v, ids]]
+        cands = cands[cands != v]
+        if cands.size == 0 or need <= 0:
+            return
+        pick = self.rng.choice(cands, size=min(need, cands.size),
+                               replace=False)
+        self.adj[v, pick] = True
+        self.adj[pick, v] = True
+
+    def _repair_overlay(self, newly_active: np.ndarray):
+        """Incremental edge repair instead of a full per-round re-roll.
+
+        Joiners/rejoiners attach up to ``min_degree`` edges (rejoiners
+        keep whatever edges survived); survivors whose *active* degree
+        fell below ``min_degree`` get repair edges; finally the active
+        subgraph is re-connected if churn split it.  Dormant edges of
+        inactive peers are retained for their possible rejoin.
+        """
+        m = self.cfg.min_degree
+        ids = np.flatnonzero(self.active)
+        if ids.size <= 1:
+            return
+        for v in newly_active:
+            deg = int(self.adj[v, ids].sum())
+            self._attach(int(v), m - deg, ids)
+        # Survivors under-degreed because their neighbors left.
+        deg_active = self.adj[np.ix_(ids, ids)].sum(axis=1)
+        for v in ids[deg_active < min(m, ids.size - 1)]:
+            deg = int(self.adj[v, ids].sum())
+            self._attach(int(v), m - deg, ids)
+        # Heterogeneous extras for fresh joiners (mirrors the full
+        # generator's extra_edge_frac so degree spread survives churn).
+        n_extra = int(self.cfg.extra_edge_frac * newly_active.size * m / 2)
+        for _ in range(n_extra):
+            v = int(self.rng.choice(newly_active))
+            self._attach(v, 1, ids)
+        # Churn can disconnect the active subgraph; bridge components.
+        sub = self.adj[np.ix_(ids, ids)]
+        comp = _components(sub)
+        while comp.max() > 0:
+            a = int(self.rng.choice(np.flatnonzero(comp == 0)))
+            b = int(self.rng.choice(np.flatnonzero(comp != 0)))
+            ga, gb = int(ids[a]), int(ids[b])
+            self.adj[ga, gb] = self.adj[gb, ga] = True
+            sub = self.adj[np.ix_(ids, ids)]
+            comp = _components(sub)
+
+    # -- round execution -------------------------------------------------
+    def begin_round(self) -> np.ndarray:
+        """Apply boundary churn for the upcoming round; return the
+        round's active set as global peer ids (ascending — local client
+        index ``i`` of the round maps to ``ids[i]``).
+
+        Splitting the boundary from the dissemination lets a caller (the
+        FL runner) decide *who trains* before the round runs: rejoiners
+        re-download the current model here, absent clients sit out.
+        Idempotent until :meth:`run_round` consumes the begun round.
+        """
+        if self._pending is None:
+            r = self.round_idx
+            joined = left = rejoined = np.zeros(0, dtype=np.int64)
+            if r > 0 and self.churn.enabled:
+                joined, left, rejoined = self._step_membership(r)
+            ids = np.flatnonzero(self.active)
+            self._pending = (r, ids, joined, left, rejoined)
+        return self._pending[1]
+
+    def next_round(self, **kw) -> SessionRound:
+        """Advance membership (boundary churn) and run one round."""
+        self.begin_round()
+        return self.run_round(**kw)
+
+    def run_round(self, *, dropouts: dict | None = None,
+                  byzantine=None,
+                  collect_maxflow: bool = False) -> SessionRound:
+        """Run the dissemination round begun by :meth:`begin_round`."""
+        self.begin_round()
+        r, ids, joined, left, rejoined = self._pending
+        self._pending = None
+        cfg_r = self.cfg.replace(n=int(ids.size),
+                                 seed=int(self.round_seed(r)))
+        if self.evolve:
+            sub_adj = self.adj[np.ix_(ids, ids)]
+            sim = RoundSimulator(
+                cfg_r, self.link_model, dropouts=dropouts,
+                byzantine=byzantine, bt_mode=self.bt_mode,
+                overlay=sub_adj, up=self.up[ids], down=self.down[ids],
+                rng=np.random.default_rng(cfg_r.seed))
+            self._exposure[np.ix_(ids, ids)] += sub_adj
+        else:
+            # Back-compat path: bit-identical to the historical
+            # ``simulate_round(cfg.replace(seed=round_seed(r)))`` loop.
+            sim = RoundSimulator(cfg_r, self.link_model,
+                                 dropouts=dropouts, byzantine=byzantine,
+                                 bt_mode=self.bt_mode)
+        res = sim.run(collect_maxflow=collect_maxflow)
+
+        dropped = ids[~res.active]
+        if self.evolve and dropped.size:
+            # A mid-round dropout is a leave observed at the deadline:
+            # it sits out and rejoins at a later round boundary.
+            self.active[dropped] = False
+            if self.churn.rejoin_after > 0:
+                self.rejoin_at[dropped] = r + 1 + self.churn.rejoin_after
+        rec = SessionRound(round_idx=r, active_ids=ids, result=res,
+                           joined=joined, left=left, rejoined=rejoined,
+                           dropped_midround=dropped)
+        self.history.append(rec)
+        self.round_idx += 1
+        return rec
+
+    def run(self, rounds: int, **kw) -> list[SessionRound]:
+        return [self.next_round(**kw) for _ in range(rounds)]
+
+    # -- cross-round topology metrics (privacy §III-E) -------------------
+    def _round_edges(self, rec: SessionRound) -> set:
+        ids = rec.active_ids
+        iu, iv = np.nonzero(np.triu(rec.result.adj, 1))
+        return set(zip(ids[iu].tolist(), ids[iv].tolist()))
+
+    def edge_persistence(self) -> float:
+        """Mean Jaccard overlap of consecutive rounds' edge sets (global
+        ids).  0 = fully re-rolled topology (today's per-round loop);
+        1 = frozen topology.  The quantity topology-dependent privacy
+        bounds grow with: persistent neighbor pairs accumulate linkable
+        observations across rounds."""
+        if len(self.history) < 2:
+            return 0.0
+        vals = []
+        prev = self._round_edges(self.history[0])
+        for rec in self.history[1:]:
+            cur = self._round_edges(rec)
+            union = len(prev | cur)
+            vals.append(len(prev & cur) / union if union else 0.0)
+            prev = cur
+        return float(np.mean(vals))
+
+    def pair_exposure(self) -> np.ndarray:
+        """(n_peers, n_peers) count of rounds each pair was adjacent."""
+        if self._exposure is not None:
+            return self._exposure.copy()
+        exp = np.zeros((self.n_peers, self.n_peers), dtype=np.int64)
+        for rec in self.history:
+            ids = rec.active_ids
+            exp[np.ix_(ids, ids)] += rec.result.adj
+        return exp
+
+    def participation(self) -> np.ndarray:
+        """Per-round active fraction relative to the current population."""
+        return np.array([rec.active_ids.size
+                         / max(1, self._pop_at(rec)) for rec in
+                         self.history])
+
+    def _pop_at(self, rec: SessionRound) -> int:
+        joined_later = sum(r.joined.size for r in self.history
+                           if r.round_idx > rec.round_idx)
+        return self.n_peers - joined_later

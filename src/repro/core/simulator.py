@@ -54,13 +54,32 @@ class RoundSimulator:
         byzantine: ByzantineModel | None = None,
         bt_mode: str = "auto",          # "exact" | "fluid" | "auto"
         exact_limit: int = 4_000_000,   # n * total_chunks budget for exact
+        *,
+        overlay: np.ndarray | None = None,
+        up: np.ndarray | None = None,
+        down: np.ndarray | None = None,
+        rng: np.random.Generator | None = None,
     ):
+        """``overlay``/``up``/``down``/``rng`` let a :class:`SwarmSession`
+        inject a persistent population (evolving topology, sticky
+        capacities) instead of re-rolling everything from ``cfg.seed``.
+        When omitted, construction is exactly the historical single-round
+        path: seed the rng, sample a fresh overlay, sample capacities —
+        in that order, so existing seeds reproduce bit-identically."""
         self.cfg = cfg
-        self.rng = np.random.default_rng(cfg.seed)
-        self.adj = random_overlay(cfg.n, cfg.min_degree, cfg.extra_edge_frac,
-                                  self.rng)
-        self.up, self.down = link_model.sample_chunks_per_slot(
-            cfg.n, cfg.chunk_bytes, cfg.slot_seconds, self.rng)
+        self.rng = np.random.default_rng(cfg.seed) if rng is None else rng
+        self.adj = (random_overlay(cfg.n, cfg.min_degree,
+                                   cfg.extra_edge_frac, self.rng)
+                    if overlay is None else np.asarray(overlay, dtype=bool))
+        if self.adj.shape != (cfg.n, cfg.n):
+            raise ValueError(f"overlay shape {self.adj.shape} != "
+                             f"({cfg.n}, {cfg.n})")
+        if up is None or down is None:
+            self.up, self.down = link_model.sample_chunks_per_slot(
+                cfg.n, cfg.chunk_bytes, cfg.slot_seconds, self.rng)
+        else:
+            self.up = np.asarray(up, dtype=np.int64)
+            self.down = np.asarray(down, dtype=np.int64)
         self.dropouts = dropouts or {}
         if bt_mode == "auto":
             bt_mode = ("exact" if cfg.n * cfg.total_chunks <= exact_limit
@@ -82,22 +101,30 @@ class RoundSimulator:
         if sigma == 0:
             return
         K = cfg.chunks_per_update
-        snd, rcv, chk = [], [], []
-        for v in range(cfg.n):
-            non_nbrs = np.flatnonzero(~self.adj[v])
-            non_nbrs = non_nbrs[non_nbrs != v]
-            if non_nbrs.size == 0:
-                continue
-            ids = self.rng.choice(K, size=min(sigma, K), replace=False)
-            tgts = self.rng.choice(non_nbrs, size=len(ids), replace=True)
-            snd.append(np.full(len(ids), v, dtype=np.int64))
-            rcv.append(tgts.astype(np.int64))
-            chk.append(v * K + ids)
-        if not snd:
+        # Vectorized over all sources at once: no per-client Python loop.
+        nn = ~self.adj          # fresh array; safe to edit the diagonal
+        np.fill_diagonal(nn, False)
+        counts = nn.sum(axis=1)
+        rows = np.flatnonzero(counts > 0)
+        if rows.size == 0:
             return    # complete overlay: no non-neighbors to spray to
-        st.apply_transfers(np.concatenate(snd), np.concatenate(rcv),
-                           np.concatenate(chk), phase_code=0)
-        st.per_slot_sent.pop()  # spray does not consume round slots
+        m = min(sigma, K)
+        # m distinct chunk offsets per source: top-m of a random matrix
+        # (the unordered-sample-without-replacement distribution).
+        keys = self.rng.random((rows.size, K))
+        ids = (np.argpartition(keys, m - 1, axis=1)[:, :m] if m < K
+               else np.argsort(keys, axis=1))
+        # One uniform non-neighbor per sprayed chunk (with replacement):
+        # pick the j-th non-neighbor by rank; stable argsort of ~nn puts
+        # the non-neighbor columns first in ascending order.
+        pick = (self.rng.random((rows.size, m))
+                * counts[rows, None]).astype(np.int64)
+        order = np.argsort(~nn[rows], axis=1, kind="stable")
+        tgts = order[np.arange(rows.size)[:, None], pick]
+        snd = np.repeat(rows, m).astype(np.int64)
+        chk = (rows[:, None] * K + ids).ravel()
+        st.apply_transfers(snd, tgts.ravel().astype(np.int64), chk,
+                           phase_code=0, consume_slot=False)
 
     # ------------------------------------------------------------------
     def _schedule_filtered(self, scheduler_fn):

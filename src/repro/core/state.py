@@ -251,10 +251,17 @@ class SwarmState:
 
     # -- transfer application -------------------------------------------
     def apply_transfers(self, snd: np.ndarray, rcv: np.ndarray,
-                        chk: np.ndarray, phase_code: int):
-        """Mark chunks delivered; update rarity, X_u and the event log."""
+                        chk: np.ndarray, phase_code: int,
+                        consume_slot: bool = True):
+        """Mark chunks delivered; update rarity, X_u and the event log.
+
+        ``consume_slot=False`` applies the transfers without charging a
+        round slot to ``per_slot_sent`` — used by the pre-round spray,
+        which happens over ephemeral tunnels before slot 0.
+        """
         if len(snd) == 0:
-            self.per_slot_sent.append(0)
+            if consume_slot:
+                self.per_slot_sent.append(0)
             return
         snd = np.asarray(snd)
         rcv = np.asarray(rcv)
@@ -293,7 +300,8 @@ class SwarmState:
 
         self.log.append(self.slot, snd, rcv, chk, b, o, phase_code)
         cnt = len(snd)
-        self.per_slot_sent.append(cnt)
+        if consume_slot:
+            self.per_slot_sent.append(cnt)
         if phase_code == 1:
             self.warmup_sent += cnt
         elif phase_code == 2:

@@ -6,9 +6,12 @@ mesh axis, followed by on-pod masked FedAvg.
 
 ``fl_step.py``  — ``make_fl_train_step`` / ``make_serve_step``: the
 pod-masked FL training step (per-pod local gradients -> torrent
-dissemination -> masked FedAvg -> AdamW) and the decode serving step.
+dissemination -> masked FedAvg -> AdamW) and the decode serving step;
+``ElasticFLStep``: the elastic-P wrapper that rebuilds mesh + ring
+schedule when the active pod count changes between rounds (§III-E).
 """
-from .fl_step import make_fl_train_step, make_serve_step
-from .torrent import torrent_fedavg
+from .fl_step import ElasticFLStep, make_fl_train_step, make_serve_step
+from .torrent import take_pods, torrent_fedavg
 
-__all__ = ["torrent_fedavg", "make_fl_train_step", "make_serve_step"]
+__all__ = ["torrent_fedavg", "take_pods", "make_fl_train_step",
+           "make_serve_step", "ElasticFLStep"]

@@ -21,8 +21,16 @@ mean gradients IS the global mean gradient).
 
 ``n_pods == 1`` folds the pod axis into the batch and runs plain DP
 SGD — the degenerate ring (P-1 = 0 stages) with no collective.
+
+``ElasticFLStep`` is the cross-round elastic form (§III-E): when the
+active pod count changes between rounds (a pod drops, a client
+rejoins), it rebuilds the mesh AND the ring schedule for the new P and
+re-jits — cached per P, so oscillating P -> P-1 -> P pays the re-mesh
+cost once per distinct pod count.
 """
 from __future__ import annotations
+
+import contextlib
 
 import jax
 import jax.numpy as jnp
@@ -135,6 +143,67 @@ def make_fl_train_step(cfg, mesh, *, lr_schedule, n_pods: int,
         return new_params, new_opt, {"loss": loss, "lr": lr}
 
     return step
+
+
+class ElasticFLStep:
+    """Elastic-P FL step: re-mesh + ring-schedule rebuild across rounds.
+
+    ``mesh_factory(p)`` returns the mesh to train ``p`` active pods on
+    (or None for the single-device path); it is consulted once per
+    distinct pod count.  Each call dispatches on the batch's leading
+    (pod) axis, so the caller just slices its batch to the surviving
+    pods — e.g. with :func:`repro.dist.torrent.take_pods` — and the
+    step re-meshes itself:
+
+        step = ElasticFLStep(cfg, lr_schedule=sched, mesh_factory=mf)
+        params, opt, m = step(params, opt, batch4, w4, a4)   # P=4 ring
+        params, opt, m = step(params, opt, batch3, w3, a3)   # P=3 ring
+        params, opt, m = step(params, opt, batch4, w4, a4)   # cached
+
+    The first call at a new P pays one trace/compile (measured as
+    ``remesh_ms`` in benchmarks/bench_session.py); revisited pod counts
+    hit the cache.  Params/opt state carry across re-meshes unchanged —
+    the §III-E recovery contract: a drop shrinks the collective, never
+    resets training.
+    """
+
+    def __init__(self, cfg, *, lr_schedule, mesh_factory, **step_kw):
+        self.cfg = cfg
+        self.lr_schedule = lr_schedule
+        self.mesh_factory = mesh_factory
+        self.step_kw = dict(step_kw)
+        self._cache: dict[int, tuple] = {}
+        self._last_p: int | None = None
+
+    def step_for(self, n_pods: int):
+        """(mesh, jitted step) for ``n_pods`` active pods; cached."""
+        if n_pods not in self._cache:
+            mesh = self.mesh_factory(n_pods)
+            step = make_fl_train_step(
+                self.cfg, mesh, lr_schedule=self.lr_schedule,
+                n_pods=n_pods, **self.step_kw)
+            self._cache[n_pods] = (mesh, jax.jit(step))
+        return self._cache[n_pods]
+
+    @property
+    def pod_counts(self) -> list[int]:
+        """Pod counts a step has been built for (re-mesh history)."""
+        return sorted(self._cache)
+
+    def __call__(self, params, opt, batch, weights, active):
+        p = int(batch["inputs"].shape[0])
+        mesh, jstep = self.step_for(p)
+        if mesh is not None and p != self._last_p:
+            # Carried state is committed to the PREVIOUS mesh's device
+            # set; replicate it onto the new (possibly smaller) one so
+            # the re-jitted step can re-shard it internally.
+            sh = NamedSharding(mesh, P())
+            params, opt = jax.device_put((params, opt), sh)
+        self._last_p = p
+        ctx = mesh if mesh is not None else contextlib.nullcontext()
+        with ctx:
+            return jstep(params, opt, batch, jnp.asarray(weights),
+                         jnp.asarray(active))
 
 
 def make_serve_step(cfg):

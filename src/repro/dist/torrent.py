@@ -183,6 +183,21 @@ def _ring_device_body(p: int, n_blocks: int, compress: bool):
     return body
 
 
+def take_pods(tree, keep):
+    """Slice the leading (pod) axis of every leaf to the surviving pods.
+
+    The elastic re-mesh companion (§III-E): when the active pod count
+    changes between rounds, the new P'-ring runs over
+    ``take_pods(updates, keep)`` with (P',) weights/active — and its
+    aggregate equals the old P-ring with the departed pods masked
+    (``active=0``), because masked FedAvg weights renormalize over the
+    same surviving mass.  Asserted in tests/test_session.py.
+    """
+    keep = jnp.asarray(keep, dtype=jnp.int32)
+    return jax.tree_util.tree_map(
+        lambda l: jnp.take(l, keep, axis=0), tree)
+
+
 def torrent_fedavg(updates, weights: jnp.ndarray, active: jnp.ndarray, *,
                    mesh=None, n_blocks: int = 4, compress: bool = False):
     """Masked FedAvg of per-pod updates via the torrent ring.

@@ -1,22 +1,31 @@
 """FL experiment runner: CFL vs GossipDFL vs FLTorrent (paper §V-B).
 
-FLTorrent rounds run the *real* dissemination pipeline: local updates
-are chunked at 256 KiB granularity, a full spray/warm-up/BT round is
-simulated over the sampled overlay and broadband capacities, and each
-client FedAvgs over its own reconstructable set.  With deadlines set
-generously (the paper's learning setup) all updates reconstruct and all
-clients agree — asserted at runtime.
+FLTorrent rounds run the *real* dissemination pipeline on a persistent
+:class:`~repro.core.session.SwarmSession`: local updates are chunked at
+256 KiB granularity, a full spray/warm-up/BT round is simulated over the
+session's overlay and broadband capacities, and each client FedAvgs over
+its own reconstructable set.  With deadlines set generously (the paper's
+learning setup) all updates reconstruct and all clients agree — asserted
+at runtime.
+
+Partial participation (§III-E): with ``churn_rate > 0`` clients leave at
+round boundaries and rejoin ``rejoin_after`` rounds later.  A client
+absent in round r holds *stale* params; at its rejoin boundary it
+re-downloads the current model before training (never trains from the
+stale base).  Clients that drop mid-round miss that round's aggregate
+and catch up the same way.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SwarmConfig, simulate_round
-from repro.core.aggregation import fedavg_pytree
+from repro.core import ChurnModel, SwarmConfig, SwarmSession
+from repro.core.aggregation import fedavg_pytree, per_client_aggregates
 from repro.core.chunking import chunk_count, flatten_update
 from repro.data.partition import partition
 from repro.data.synthetic import make_synthetic
@@ -39,6 +48,11 @@ class FLConfig:
     min_degree: int = 5
     # FLTorrent dissemination knobs (defaults = paper defaults)
     swarm_overrides: dict = field(default_factory=dict)
+    # Cross-round churn (§III-E): per-boundary Bernoulli leave
+    # probability; leavers rejoin ``rejoin_after`` rounds later.  0 =
+    # the historical full-participation loop, bit-identical.
+    churn_rate: float = 0.0
+    rejoin_after: int = 2
 
 
 @dataclass
@@ -46,6 +60,11 @@ class FLResult:
     accuracy: list            # per-round test accuracy
     agreement: bool = True    # FLTorrent: all clients agreed every round
     reconstruct_frac: float = 1.0
+    # Churn diagnostics (fltorrent with churn_rate > 0):
+    participation: Optional[list] = None  # per-round active fraction
+    rejoin_rounds: Optional[list] = None  # rounds where a client re-synced
+    stale_seen: bool = False   # some catch-up client really held stale params
+    caught_up: bool = True     # every active client trained from current params
 
 
 def run_experiment(method: str, cfg: FLConfig) -> FLResult:
@@ -98,38 +117,85 @@ def run_experiment(method: str, cfg: FLConfig) -> FLResult:
         return FLResult(accs)
 
     if method == "fltorrent":
-        params = params0   # all clients agree each round (checked)
+        params = params0   # current global model (active clients agree)
         flat0, _ = flatten_update(params0)
         upd_bytes = flat0.size * 4
         k_chunks = max(2, chunk_count(upd_bytes, 256 * 1024))
+        scfg = SwarmConfig(
+            n=cfg.n_clients, chunks_per_update=k_chunks,
+            min_degree=cfg.min_degree, seed=cfg.seed,
+            **cfg.swarm_overrides)
+        # Persistent swarm: the session carries population, overlay and
+        # capacities across rounds; round_seed keeps the historical
+        # seed*1000+r per-round streams, so churn_rate=0 reproduces the
+        # old per-round simulate_round loop bit-identically.
+        session = SwarmSession(scfg, churn=ChurnModel(
+            leave_prob=cfg.churn_rate, join_rate=0.0,
+            rejoin_after=cfg.rejoin_after))
+        # Per-client held model: a reference to some past global params.
+        # Clients absent in a round keep a stale reference and re-sync
+        # at their rejoin boundary.
+        client_params = [params0] * cfg.n_clients
+        in_sync = np.ones(cfg.n_clients, dtype=bool)
+        participation: list[float] = []
+        rejoin_rounds: list[int] = []
+        stale_seen = False
+        caught_up = True
         for r in range(cfg.rounds):
+            ids = session.begin_round()
+            # Rejoin-at-round-boundary (§III-E): a returning client
+            # re-downloads the CURRENT model before training.
+            catchup = ids[~in_sync[ids]]
+            if catchup.size:
+                cur, _ = flatten_update(params)
+            for v in catchup:
+                held, _ = flatten_update(client_params[v])
+                stale_seen |= not bool(jnp.array_equal(held, cur))
+                client_params[v] = params
+                in_sync[v] = True
+                rejoin_rounds.append(r)
+            participation.append(ids.size / cfg.n_clients)
             updates = []
-            for v in range(cfg.n_clients):
+            for v in ids:
+                caught_up &= client_params[v] is params
                 out = local_train(params, train.x[parts[v]],
                                   train.y[parts[v]], nprng)
                 updates.append(compute_update(params, out))
-            # Real dissemination round at the true chunk count.
-            scfg = SwarmConfig(
-                n=cfg.n_clients, chunks_per_update=k_chunks,
-                min_degree=cfg.min_degree, seed=cfg.seed * 1000 + r,
-                **cfg.swarm_overrides)
-            res = simulate_round(scfg)
-            recon = res.reconstructable           # (n, n) bool
+            # Real dissemination round at the true chunk count over the
+            # active sub-swarm (local index i <-> global client ids[i]).
+            rec = session.run_round()
+            res = rec.result
+            recon = res.reconstructable           # (n_act, n_act) bool
             recon_fracs.append(float(recon.mean()))
-            # Every client aggregates over its own A_v^r.
-            aggs = []
-            for v in range(cfg.n_clients):
-                active = recon[v].astype(np.float32)
-                aggs.append(fedavg_pytree(updates, weights, active))
-            # Full dissemination => identical aggregates.
-            ref_flat, _ = flatten_update(aggs[0])
-            for a in aggs[1:]:
-                fa, _ = flatten_update(a)
-                if not bool(jnp.allclose(fa, ref_flat, atol=1e-6)):
+            w_act = weights[ids]
+            surv = np.flatnonzero(res.active)
+            ref = int(surv[0]) if surv.size else 0
+            # Every client aggregates over its own A_v^r.  In the common
+            # full-dissemination case every row of ``recon`` is the same
+            # set, so all n aggregates are *definitionally* identical:
+            # compute the FedAvg once instead of n pytree reductions.
+            if not bool((recon == recon[ref]).all()):
+                # Rows differ: verify agreement on the flat vectors with
+                # ONE (n, n) x (n, D) matmul, not n pytree FedAvgs.
+                flats = jnp.stack([flatten_update(u)[0] for u in updates])
+                per_cl = per_client_aggregates(flats, w_act, recon)
+                if not bool(jnp.allclose(per_cl[surv], per_cl[ref][None],
+                                         atol=1e-6)):
                     agreement = False
-            params = apply_aggregate(params, aggs[0])
+            agg = fedavg_pytree(updates, w_act, recon[ref])
+            params = apply_aggregate(params, agg)
+            # Clients active at the deadline applied this aggregate;
+            # everyone else (absent or dropped mid-round) is now stale.
+            in_sync[:] = False
+            got = ids[res.active]
+            for v in got:
+                client_params[v] = params
+            in_sync[got] = True
             accs.append(accuracy(apply_fn, params, test.x, test.y))
         return FLResult(accs, agreement=agreement,
-                        reconstruct_frac=float(np.mean(recon_fracs)))
+                        reconstruct_frac=float(np.mean(recon_fracs)),
+                        participation=participation,
+                        rejoin_rounds=rejoin_rounds,
+                        stale_seen=stale_seen, caught_up=caught_up)
 
     raise ValueError(method)

@@ -14,6 +14,8 @@ general P.
 """
 from __future__ import annotations
 
+import jax
+
 from repro.sharding.api import AxisType, make_mesh
 
 
@@ -28,6 +30,26 @@ def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     """Tiny mesh over however many devices this host has (tests)."""
     return make_mesh(shape, axes,
                      axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_pod_mesh(n_pods: int, *, data: int = 1, model: int = 1,
+                  devices=None):
+    """("pod", "data", "model") mesh over a *subset* of the host's
+    devices — the elastic re-mesh entry point (§III-E).
+
+    Dropping from P to P-1 pods keeps the first ``(P-1)*data*model``
+    devices and rebuilds the mesh; the torrent ring schedule then
+    re-lowers for the new pod axis automatically (its stage count is
+    P-1).  ``devices`` overrides the host device list (tests).
+    """
+    need = n_pods * data * model
+    devs = list(jax.devices() if devices is None else devices)
+    if len(devs) < need:
+        raise ValueError(f"{need} devices needed for pods={n_pods} x "
+                         f"data={data} x model={model}; have {len(devs)}")
+    return make_mesh((n_pods, data, model), ("pod", "data", "model"),
+                     axis_types=(AxisType.Auto,) * 3,
+                     devices=devs[:need])
 
 
 def pod_axis_size(mesh) -> int:

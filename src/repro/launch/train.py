@@ -5,22 +5,33 @@ masked FedAvg -> AdamW, with round-boundary checkpointing and restart
 (--resume picks up at the latest checkpoint, the paper's §III-E
 rejoin-at-round-boundary semantics).
 
+``--drop-pod`` is a real recovery drill, not just a mask: at
+``--drop-at`` (default steps/2) the run checkpoints, re-meshes from P to
+P-1 pods (``ElasticFLStep`` rebuilds the mesh and the torrent ring
+schedule for the shrunken collective), reloads the checkpoint, and
+continues — asserting loss continuity across the re-mesh.  Params and
+optimizer state carry over: a drop shrinks the swarm, never resets
+training.
+
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
         --reduced --steps 200 --batch 8 --seq 64 --ckpt /tmp/ckpt
+    PYTHONPATH=src python -m repro.launch.train --pods 4 --drop-pod 2 \
+        --reduced --steps 40 --batch 8 --seq 32
 """
 from __future__ import annotations
 
 import argparse
+import math
+import os
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 
 def synthetic_batch(rng: np.random.Generator, n_pods: int, b_local: int,
                     seq: int, vocab: int, *, frames: int = 0):
     """Deterministic LM stream: next-token-predictable structured data."""
+    import jax.numpy as jnp
     if frames:
         x = rng.normal(size=(n_pods, b_local, seq, frames)).astype(
             np.float32)
@@ -46,69 +57,122 @@ def main(argv=None):
     ap.add_argument("--ckpt", default="")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--drop-pod", type=int, default=-1,
-                    help="simulate a mid-run pod failure (active mask)")
+                    help="mid-run pod failure: checkpoint, re-mesh "
+                         "P->P-1, continue (loss continuity asserted)")
+    ap.add_argument("--drop-at", type=int, default=-1,
+                    help="step of the pod failure (default steps/2)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
+    # Multi-pod runs need one XLA device per pod; on a plain CPU host
+    # fake them BEFORE the backend initializes (no-op if the operator
+    # already set a device count or real accelerators exist).
+    if args.pods > 1 and ("xla_force_host_platform_device_count"
+                          not in os.environ.get("XLA_FLAGS", "")):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.pods}")
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import latest_round, load_checkpoint, \
+        save_checkpoint
     from repro.configs import get_config
-    from repro.dist.fl_step import make_fl_train_step
-    from repro.launch.mesh import make_host_mesh
+    from repro.dist.fl_step import ElasticFLStep
+    from repro.launch.mesh import make_host_mesh, make_pod_mesh
     from repro.models import init_params
     from repro.optim import adamw_init
     from repro.optim.schedules import linear_warmup_cosine
-    from repro.checkpoint import latest_round, load_checkpoint, \
-        save_checkpoint
 
     cfg = get_config(args.arch, reduced=args.reduced)
     n_dev = jax.device_count()
-    mesh = make_host_mesh((n_dev, 1), ("data", "model")) if args.pods <= 1 \
-        else make_host_mesh((args.pods, n_dev // args.pods, 1),
-                            ("pod", "data", "model"))
     n_pods = args.pods if args.pods > 1 else 1
+    if n_pods > n_dev:
+        raise SystemExit(f"--pods {n_pods} needs >= {n_pods} XLA devices "
+                         f"(have {n_dev}); set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
+    dpp = max(n_dev // n_pods, 1)      # data-parallel devices per pod
+
+    def mesh_factory(p: int):
+        if n_pods == 1:
+            return make_host_mesh((n_dev, 1), ("data", "model"))
+        return make_pod_mesh(p, data=dpp)
 
     key = jax.random.PRNGKey(0)
     params = init_params(cfg, key)
     opt = adamw_init(params)
     start = 0
+    active_pods = n_pods
     if args.ckpt:
         r = latest_round(args.ckpt)
         if r is not None:
             (params, opt), meta = load_checkpoint(args.ckpt, r,
                                                   (params, opt))
             start = r + 1
-            print(f"resumed from round {r}", flush=True)
+            # A checkpoint written after a drop records the shrunken
+            # collective; resuming must not silently re-expand it.
+            active_pods = int(meta.get("pods", n_pods))
+            print(f"resumed from round {r} ({active_pods} pods)",
+                  flush=True)
 
-    step_fn = make_fl_train_step(
-        cfg, mesh, lr_schedule=linear_warmup_cosine(
+    step_fn = ElasticFLStep(
+        cfg, lr_schedule=linear_warmup_cosine(
             args.lr, 10, max(args.steps, 20)),
-        n_pods=n_pods)
+        mesh_factory=mesh_factory)
     rng = np.random.default_rng(0)
-    weights = jnp.ones((n_pods,))
     b_local = max(args.batch // n_pods, 1)
     frames = cfg.d_model if not cfg.has_embedding else 0
 
-    with mesh:
-        jstep = jax.jit(step_fn)
-        t0 = time.time()
-        for it in range(start, args.steps):
-            active = np.ones(n_pods, np.float32)
-            if args.drop_pod >= 0 and it >= args.steps // 2:
-                active[args.drop_pod % n_pods] = 0.0   # straggler masked
-            batch = synthetic_batch(rng, n_pods, b_local, args.seq,
-                                    cfg.vocab, frames=frames)
-            params, opt, m = jstep(params, opt, batch, weights,
-                                   jnp.asarray(active))
-            if it % args.log_every == 0 or it == args.steps - 1:
-                print(f"step {it:5d}  loss {float(m['loss']):.4f}  "
-                      f"lr {float(m['lr']):.2e}  "
-                      f"({time.time() - t0:.1f}s)", flush=True)
-            if args.ckpt and (it + 1) % args.ckpt_every == 0:
-                save_checkpoint(args.ckpt, it, (params, opt),
-                                meta={"arch": args.arch})
-        final_loss = float(m["loss"])
+    drop_at = args.drop_at if args.drop_at >= 0 else args.steps // 2
+    pre_drop_loss = None
+    remeshed = False
+    t0 = time.time()
+    for it in range(start, args.steps):
+        if (args.drop_pod >= 0 and it == drop_at and active_pods > 1):
+            # §III-E recovery drill: durable state at the boundary,
+            # shrink the collective, rebuild mesh + ring, continue.
+            if args.ckpt:
+                save_checkpoint(args.ckpt, it - 1, (params, opt),
+                                meta={"arch": args.arch,
+                                      "pods": active_pods - 1})
+                (params, opt), _ = load_checkpoint(args.ckpt, it - 1,
+                                                   (params, opt))
+            active_pods -= 1
+            remeshed = True
+            print(f"step {it:5d}  pod {args.drop_pod % n_pods} dropped: "
+                  f"re-meshing {active_pods + 1} -> {active_pods} pods",
+                  flush=True)
+        batch = synthetic_batch(rng, active_pods, b_local, args.seq,
+                                cfg.vocab, frames=frames)
+        params, opt, m = step_fn(params, opt, batch,
+                                 jnp.ones((active_pods,)),
+                                 jnp.ones((active_pods,)))
+        loss = float(m["loss"])
+        if it == drop_at - 1:
+            pre_drop_loss = loss
+        if pre_drop_loss is not None and it == drop_at and remeshed:
+            # Continuity across the re-mesh: same params, smaller
+            # collective — anything beyond noise means recovery broke.
+            if not math.isfinite(loss) or loss > 3.0 * pre_drop_loss + 0.5:
+                raise RuntimeError(
+                    f"loss continuity broken across re-mesh: "
+                    f"{pre_drop_loss:.4f} -> {loss:.4f}")
+            print(f"step {it:5d}  re-mesh continuity ok "
+                  f"({pre_drop_loss:.4f} -> {loss:.4f})", flush=True)
+        if it % args.log_every == 0 or it == args.steps - 1:
+            print(f"step {it:5d}  loss {loss:.4f}  "
+                  f"lr {float(m['lr']):.2e}  pods {active_pods}  "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+        if args.ckpt and (it + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt, it, (params, opt),
+                            meta={"arch": args.arch,
+                                  "pods": active_pods})
+    final_loss = float(m["loss"])
     if args.ckpt:
         save_checkpoint(args.ckpt, args.steps - 1, (params, opt),
-                        meta={"arch": args.arch, "final": True})
+                        meta={"arch": args.arch, "pods": active_pods,
+                              "final": True})
     print(f"done: final loss {final_loss:.4f}", flush=True)
     return final_loss
 
