@@ -30,6 +30,9 @@ def _run_asr(n, K, observers, seeds=(0, 1), pooled=False, **kw):
                           seed=seed, scheduler_impl="loop", **kw)
         res = simulate_round(cfg, bt_mode="fluid")
         obs = np.arange(observers)
+        # res.log is the typed TransferTrace; the vectorized scorers
+        # consume it natively (bit-exact vs the historical dict path —
+        # pinned in tests/golden_schedules.json).
         reps = run_all_attacks(res.log, obs, K, pooled=pooled)
         for k in ("sequence", "count", "cluster"):
             out[k].append(reps[k].max_asr)

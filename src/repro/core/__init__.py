@@ -7,25 +7,42 @@ Public API:
 * ``SwarmSession`` / ``ChurnModel`` — the persistent multi-round swarm:
   cross-round churn (leave/join/rejoin at round boundaries), evolving
   overlay with incremental edge repair, capacity persistence (§III-E).
-* ``schedulers`` — RandomFIFO / RandomFastestFirst / GreedyFastestFirst /
-  distributed / flooding (+ max-flow stage upper bound).
+* ``policy`` — the SchedulerPolicy plugin API: SlotView (visibility-
+  scoped per-slot observation), register_policy/get_policy registry;
+  ``SwarmConfig.scheduler`` accepts a name or an instance.
+* ``schedulers`` — the §III-C family (RandomFIFO / RandomFastestFirst /
+  GreedyFastestFirst / distributed / flooding + vanilla-BT) as
+  registered policies over two interchangeable slot engines
+  (+ max-flow stage upper bound).
+* ``trace`` — typed columnar TransferTrace: the observation contract
+  consumed by attacks/privacy/audit (round/phase slicing, observer
+  masking, cross-round concatenation via ``SwarmSession.trace()``).
 * ``privacy`` — Eq. (1)-(5) unlinkability bounds + empirical checks.
-* ``attacks`` — Sequential/Amount Greedy + Clustering, ASR metrics.
+* ``attacks`` — vectorized Sequential/Amount Greedy + Clustering and
+  the cross-round persistent-neighbor linkage adversary, ASR metrics.
 * ``aggregation`` — FedAvg over the reconstructable active set.
 * ``chunking`` — update <-> chunks + torrent descriptors.
 * ``audit`` — commit-then-reveal tracker accountability.
 """
 from . import (aggregation, attacks, audit, bittorrent, byzantine,
-               capacities, chunking, maxflow, overlay, privacy,
-               schedulers, session, simulator, state, types)
-from .session import ChurnModel, SessionRound, SwarmSession
+               capacities, chunking, maxflow, overlay, policy, privacy,
+               schedulers, session, simulator, state, trace, types)
+from .policy import (SchedulerPolicy, SlotView, VisibilityError,
+                     get_policy, policy_names, register_policy)
+from .session import (ChurnModel, ChurnAwareSpray, SessionRound,
+                      SprayPlan, SwarmSession)
 from .simulator import RoundResult, RoundSimulator, simulate_round
+from .trace import TransferTrace
 from .types import RoundMetrics, SwarmConfig
 
 __all__ = [
     "SwarmConfig", "RoundMetrics", "RoundSimulator", "RoundResult",
     "SwarmSession", "ChurnModel", "SessionRound",
+    "SchedulerPolicy", "SlotView", "VisibilityError", "get_policy",
+    "policy_names", "register_policy", "TransferTrace",
+    "ChurnAwareSpray", "SprayPlan",
     "simulate_round", "aggregation", "attacks", "audit", "bittorrent",
     "byzantine", "capacities", "chunking", "maxflow", "overlay",
-    "privacy", "schedulers", "session", "simulator", "state", "types",
+    "policy", "privacy", "schedulers", "session", "simulator", "state",
+    "trace", "types",
 ]

@@ -24,6 +24,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .overlay import random_overlay
+from .trace import TransferTrace
 
 
 def _h(b: bytes) -> str:
@@ -73,6 +74,72 @@ class AuditResult:
         return not self.ok
 
 
+def directives_from_trace(trace) -> list:
+    """Warm-up rows of a :class:`TransferTrace` as revealable tracker
+    directives ``(slot, sender, receiver, chunk)`` — what an auditable
+    tracker logs for the commit-then-reveal check (§III-D)."""
+    tr = TransferTrace.from_log(trace)
+    view = tr.warmup()
+    return list(zip(view.slot.tolist(), view.sender.tolist(),
+                    view.receiver.tolist(), view.chunk.tolist()))
+
+
+def verify_directives(
+    adj: np.ndarray,
+    directives,
+    up_budget: np.ndarray,
+    down_budget: np.ndarray,
+    retries: set | None = None,
+) -> list:
+    """Checks (iii)-(v) on a directive batch, vectorized.
+
+    ``directives`` is a list of ``(slot, snd, rcv, chunk)`` tuples (see
+    :func:`directives_from_trace`) or a :class:`TransferTrace`.  Returns
+    the violation messages (empty = clean); one representative message
+    per violated check, anchored at its first offending directive.
+    """
+    retries = retries or set()
+    if isinstance(directives, TransferTrace):
+        directives = directives_from_trace(directives)
+    if not directives:
+        return []
+    arr = np.asarray(directives, dtype=np.int64)
+    slot, snd, rcv, chk = arr.T
+    violations: list[str] = []
+
+    # (iii) adjacency
+    bad = ~adj[snd, rcv]
+    if bad.any():
+        i = int(np.flatnonzero(bad)[0])
+        violations.append(
+            f"non-adjacent directive {snd[i]}->{rcv[i]}@{slot[i]}")
+
+    # (iv) per-stage capacity caps: grouped counts per (slot, client)
+    n = len(up_budget)
+    for who, budget, label in ((snd, up_budget, "uplink"),
+                               (rcv, down_budget, "downlink")):
+        code = slot * n + who
+        uc, cnt = np.unique(code, return_counts=True)
+        over = cnt > np.asarray(budget)[uc % n]
+        if over.any():
+            i = int(np.flatnonzero(over)[0])
+            violations.append(
+                f"{label} cap exceeded for {uc[i] % n}@{uc[i] // n}")
+
+    # (v) no redundant (receiver, chunk) deliveries except logged retries
+    code = rcv * (chk.max() + 1) + chk
+    order = np.argsort(code, kind="stable")
+    dup = np.zeros(len(code), dtype=bool)
+    dup[order[1:]] = code[order][1:] == code[order][:-1]
+    if dup.any():
+        for i in np.flatnonzero(dup):
+            pair = (int(rcv[i]), int(chk[i]))
+            if pair not in retries:
+                violations.append(f"redundant delivery {pair}")
+                break
+    return violations
+
+
 def verify_round(
     commitment: TrackerCommitment,
     log: RoundLog,
@@ -92,28 +159,7 @@ def verify_round(
     if adjacency_digest(adj) != log.adjacency_digest:
         violations.append("overlay does not match seed derivation")
 
-    # (iii)-(v) directive checks
-    per_stage_up: dict[tuple[int, int], int] = {}
-    per_stage_down: dict[tuple[int, int], int] = {}
-    delivered: set[tuple[int, int]] = set()
-    for (slot, snd, rcv, chunk) in log.directives:
-        if not adj[snd, rcv]:
-            violations.append(f"non-adjacent directive {snd}->{rcv}@{slot}")
-            break
-        ku = (slot, snd)
-        kv = (slot, rcv)
-        per_stage_up[ku] = per_stage_up.get(ku, 0) + 1
-        per_stage_down[kv] = per_stage_down.get(kv, 0) + 1
-        if per_stage_up[ku] > up_budget[snd]:
-            violations.append(f"uplink cap exceeded for {snd}@{slot}")
-            break
-        if per_stage_down[kv] > down_budget[rcv]:
-            violations.append(f"downlink cap exceeded for {rcv}@{slot}")
-            break
-        pair = (rcv, chunk)
-        if pair in delivered and pair not in log.retries:
-            violations.append(f"redundant delivery {pair}")
-            break
-        delivered.add(pair)
-
+    # (iii)-(v) directive checks, vectorized over the batch
+    violations += verify_directives(adj, log.directives, up_budget,
+                                    down_budget, log.retries)
     return AuditResult(ok=not violations, violations=violations)

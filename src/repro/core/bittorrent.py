@@ -24,20 +24,24 @@ from __future__ import annotations
 
 import numpy as np
 
+from .policy import SlotView
 from .state import SwarmState
-from .schedulers import schedule_centralized
+from .schedulers import VanillaBTPolicy
+
+_BT_POLICY = VanillaBTPolicy()          # stateless; shared singleton
 
 
 def bt_exact_slot(state: SwarmState):
     """One slot of vanilla BT: rarest-first, random feasible senders.
 
-    Routed through the configured slot engine (``scheduler_impl``):
-    with the default batched engine the whole-universe supply matrix is
-    built once per slot and all receivers are matched in vectorized
-    budgeted rounds, which is what makes chunk-level exact BT viable at
-    paper scale (n x K in the millions).
+    Drives the ``bt_vanilla`` policy (phase applicability ``("bt",)``)
+    through the configured slot engine (``scheduler_impl``): with the
+    default batched engine the whole-universe supply matrix is built
+    once per slot and all receivers are matched in vectorized budgeted
+    rounds, which is what makes chunk-level exact BT viable at paper
+    scale (n x K in the millions).
     """
-    return schedule_centralized(state, "random_fifo")
+    return _BT_POLICY.schedule(SlotView(state, _BT_POLICY.visibility))
 
 
 def run_bt_fluid(state: SwarmState, s_max: int) -> int:

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from .trace import TransferTrace
+
 
 # ----------------------------------------------------------------------
 # Closed-form bounds
@@ -122,16 +124,19 @@ def unlinkability_level(kappa: int, k_gate: int) -> float:
 # Empirical accounting from a simulated round
 # ----------------------------------------------------------------------
 
-def empirical_posteriors(log: dict, warmup_only: bool = True) -> np.ndarray:
-    """Per-transfer empirical O_u/B_u for honest-sender transfers."""
-    mask = log["phase"] == 1 if warmup_only else np.ones_like(log["phase"], bool)
-    b = log["b_size"][mask].astype(np.float64)
-    o = log["o_size"][mask].astype(np.float64)
-    b = np.maximum(b, 1.0)
-    return o / b
+def empirical_posteriors(log, warmup_only: bool = True) -> np.ndarray:
+    """Per-transfer empirical O_u/B_u for honest-sender transfers.
+
+    ``log`` is a :class:`~repro.core.trace.TransferTrace` (legacy log
+    dicts are coerced at the boundary).
+    """
+    tr = TransferTrace.from_log(log)
+    view = tr.warmup() if warmup_only else tr
+    b = np.maximum(view.b_size.astype(np.float64), 1.0)
+    return view.o_size.astype(np.float64) / b
 
 
-def check_eq1(log: dict, kappa: int, k_gate: int) -> bool:
+def check_eq1(log, kappa: int, k_gate: int) -> bool:
     """Every gated warm-up transfer satisfies O_u/B_u <= kappa/k_gate."""
     post = empirical_posteriors(log, warmup_only=True)
     return bool((post <= per_transfer_cap(kappa, k_gate) + 1e-12).all())

@@ -1,5 +1,13 @@
 """Warm-up chunk schedulers (paper §III-C) + vanilla-BT slot scheduling.
 
+The family ships as :class:`~repro.core.policy.SchedulerPolicy` classes
+registered under their paper names (``SwarmConfig.scheduler`` accepts a
+name or an instance; see core/policy.py for the plugin API and
+examples/custom_policy.py for a 20-line custom policy).  The policy
+layer is a thin declaration of *what the mode may see*; the slot
+*engines* below do the work and remain interchangeable backends behind
+every policy (``SwarmConfig.scheduler_impl``).
+
 Implements the paper's scheduler family:
 
 * ``random_fifo``            — §III-C.3: random feasible sender, FIFO-ish
@@ -44,8 +52,13 @@ Two slot-engine implementations are provided (``SwarmConfig
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
+
 import numpy as np
 
+from .policy import (SchedulerPolicy, SlotView, VISIBILITY_FULL,
+                     VISIBILITY_NEIGHBORHOOD, VISIBILITY_NONE,
+                     get_policy, register_policy)
 from .state import SwarmState
 
 BIG = 1 << 40
@@ -753,13 +766,30 @@ def _schedule_distributed_batched(state: SwarmState):
 # Flooding (§III-C.7) — shared by both engines (stateful pair memory)
 # ----------------------------------------------------------------------
 
+@dataclass
+class FloodRoundState:
+    """Typed per-round flooding memory, owned by the policy instance.
+
+    ``sent`` maps the directed pair (sender, receiver) to the set of
+    chunk ids already pushed over it; flooding never repeats a push, but
+    receivers may already hold the chunk (wasted bandwidth), which is
+    exactly why flooding under-performs coordinated warm-up (§III-C).
+    """
+
+    sent: dict = field(default_factory=dict)   # (u, v) -> set[int]
+
+    def seen(self, u: int, v: int) -> set:
+        return self.sent.setdefault((u, v), set())
+
+
 def schedule_flooding(state: SwarmState, sent_pairs: dict):
     """Push random eligible chunks to random neighbors, no repetition.
 
-    ``sent_pairs`` maps (sender, receiver) -> set of already-pushed chunk
-    ids; receivers may already hold the chunk (wasted bandwidth), which
-    is exactly why flooding under-performs coordinated warm-up (§III-C).
+    ``sent_pairs`` is the :class:`FloodRoundState` pair memory (legacy
+    callers may still pass the raw dict it wraps).
     """
+    if isinstance(sent_pairs, FloodRoundState):
+        sent_pairs = sent_pairs.sent
     cfg = state.cfg
     rng = state.rng
     n = cfg.n
@@ -793,7 +823,10 @@ def schedule_flooding(state: SwarmState, sent_pairs: dict):
 
 
 # ----------------------------------------------------------------------
-# Engine dispatch
+# Policy classes: the §III-C family on the SchedulerPolicy protocol.
+# Both slot engines stay interchangeable backends behind each policy
+# (``SwarmConfig.scheduler_impl``); schedules are byte-identical to the
+# historical string dispatch (tests/golden_schedules.json).
 # ----------------------------------------------------------------------
 
 CENTRALIZED = {"random_fifo", "random_fastest_first", "greedy_fastest_first"}
@@ -805,6 +838,89 @@ def _impl(state: SwarmState) -> str:
         raise ValueError(f"unknown scheduler_impl {impl!r}")
     return impl
 
+
+class CentralizedPolicy(SchedulerPolicy):
+    """Tracker-assigned modes (§III-C.3-5): full supply-matrix view."""
+
+    visibility = VISIBILITY_FULL
+    mode: str = ""
+
+    def schedule(self, view: SlotView):
+        state = view._engine_state()
+        if _impl(state) == "loop":
+            return _schedule_centralized_loop(state, self.mode)
+        return _schedule_centralized_batched(state, self.mode)
+
+
+@register_policy
+class RandomFIFOPolicy(CentralizedPolicy):
+    """§III-C.3: random feasible sender, random receiver order."""
+
+    name = mode = "random_fifo"
+
+
+@register_policy
+class RandomFastestFirstPolicy(CentralizedPolicy):
+    """§III-C.4: senders prioritize the fastest requesters."""
+
+    name = mode = "random_fastest_first"
+
+
+@register_policy
+class GreedyFastestFirstPolicy(CentralizedPolicy):
+    """§III-C.5: each request to the fastest feasible sender (paper
+    default)."""
+
+    name = mode = "greedy_fastest_first"
+
+
+@register_policy
+class VanillaBTPolicy(CentralizedPolicy):
+    """Vanilla BitTorrent swarming slot (§III-A step 4): ungated
+    rarest-first with random feasible senders — the BT-phase backend
+    behind :func:`repro.core.bittorrent.bt_exact_slot`."""
+
+    name = "bt_vanilla"
+    mode = "random_fifo"
+    phases = ("bt",)
+
+
+@register_policy
+class DistributedPolicy(SchedulerPolicy):
+    """§III-C.6: clients see only the neighborhood availability union
+    C^T A(v); requests target random neighbors and may miss."""
+
+    name = "distributed"
+    visibility = VISIBILITY_NEIGHBORHOOD
+
+    def schedule(self, view: SlotView):
+        state = view._engine_state()
+        if _impl(state) == "loop":
+            return _schedule_distributed_loop(state)
+        return _schedule_distributed_batched(state)
+
+
+@register_policy
+class FloodingPolicy(SchedulerPolicy):
+    """§III-C.7: random push without receiver state; the per-round pair
+    memory is typed policy-owned state, reset every round."""
+
+    name = "flooding"
+    visibility = VISIBILITY_NONE
+
+    def __init__(self):
+        self.round_state = FloodRoundState()
+
+    def reset(self, cfg) -> None:
+        self.round_state = FloodRoundState()
+
+    def schedule(self, view: SlotView):
+        return schedule_flooding(view._engine_state(), self.round_state)
+
+
+# ----------------------------------------------------------------------
+# Legacy entry points (pre-policy API), kept for external callers
+# ----------------------------------------------------------------------
 
 def schedule_centralized(state: SwarmState, mode: str):
     if _impl(state) == "loop":
@@ -819,12 +935,20 @@ def schedule_distributed(state: SwarmState):
 
 
 def run_scheduler(state: SwarmState, flood_state: dict | None = None):
-    name = state.cfg.scheduler
-    if name in CENTRALIZED:
-        return schedule_centralized(state, name)
-    if name == "distributed":
-        return schedule_distributed(state)
-    if name == "flooding":
-        assert flood_state is not None
-        return schedule_flooding(state, flood_state)
-    raise ValueError(f"unknown scheduler {name!r}")
+    """One slot of ``state.cfg.scheduler`` via the policy registry.
+
+    Shim for the historical string-dispatch signature: resolves the
+    configured policy and schedules a single slot.  ``flood_state`` (a
+    raw pair-memory dict) is honored for flooding so old callers keep
+    their cross-slot no-repeat semantics; policy-native callers use
+    :class:`FloodingPolicy`'s own round state instead.
+    """
+    pol = get_policy(state.cfg.scheduler)
+    if isinstance(pol, FloodingPolicy):
+        # The shim builds a fresh policy per call, so a legacy caller
+        # MUST thread the pair memory or the cross-slot no-repeat
+        # invariant silently breaks (the historical contract).
+        assert flood_state is not None, \
+            "flooding via run_scheduler() needs a caller-held flood_state"
+        pol.round_state = FloodRoundState(sent=flood_state)
+    return pol.schedule(SlotView(state, pol.visibility))

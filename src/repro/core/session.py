@@ -53,6 +53,7 @@ import numpy as np
 from . import capacities as cap
 from .overlay import _components, random_overlay
 from .simulator import RoundResult, RoundSimulator
+from .trace import TransferTrace
 from .types import SwarmConfig
 
 
@@ -64,15 +65,168 @@ class ChurnModel:
     round boundary; ``join_rate`` — Poisson mean of *fresh* peers joining
     per boundary; ``rejoin_after`` — a leaver rejoins at the boundary
     this many rounds later (0 = leavers never come back).
+
+    ``rejoin_dist`` selects the rejoin-delay law: ``"fixed"`` is the
+    historical deterministic delay; ``"geometric"`` samples each
+    leaver's delay from Geometric(1/rejoin_after) (mean
+    ``rejoin_after``), modelling heterogeneous absence durations.
+    ``participation()`` stays exact either way — it is computed from the
+    realized membership history, not the delay law.
     """
 
     leave_prob: float = 0.0
     join_rate: float = 0.0
     rejoin_after: int = 2
+    rejoin_dist: str = "fixed"      # "fixed" | "geometric"
+
+    def __post_init__(self):
+        if self.rejoin_dist not in ("fixed", "geometric"):
+            raise ValueError(
+                f"unknown rejoin_dist {self.rejoin_dist!r}")
 
     @property
     def enabled(self) -> bool:
         return self.leave_prob > 0.0 or self.join_rate > 0.0
+
+
+@dataclass
+class SprayPlan:
+    """Explicit pre-round spray directives for one round (local ids).
+
+    Produced by a :class:`SprayPolicy` at the round boundary and applied
+    verbatim by the simulator's spray step.  ``fresh`` marks directives
+    that open a NEW ephemeral tunnel (a true re-spray); unset rows reuse
+    a tunnel that survived from an earlier round — the cost churn-aware
+    budgeting saves.
+    """
+
+    src: np.ndarray                 # local source indices
+    tgt: np.ndarray                 # local target indices (non-neighbors)
+    offset: np.ndarray              # within-update chunk offsets
+    fresh: np.ndarray               # bool: new tunnel vs reused
+
+    def as_local_arrays(self):
+        return (np.asarray(self.src, np.int64),
+                np.asarray(self.tgt, np.int64),
+                np.asarray(self.offset, np.int64))
+
+    def fresh_counts(self, n: int) -> np.ndarray:
+        """(n,) fresh-tunnel count per local source."""
+        src = np.asarray(self.src, np.int64)
+        return np.bincount(src[np.asarray(self.fresh, bool)], minlength=n)
+
+
+class SprayPolicy:
+    """Policy hook on :meth:`SwarmSession.begin_round`: decide what each
+    source sprays this round.  Returning ``None`` keeps the historical
+    full re-spray path (byte-identical; the simulator draws its own
+    targets)."""
+
+    def plan(self, session: "SwarmSession",
+             ids: np.ndarray) -> Optional[SprayPlan]:
+        return None
+
+
+class ChurnAwareSpray(SprayPolicy):
+    """Churn-aware spray budgets (§III-B.1 under §III-E churn).
+
+    The session tracks, per source, which sprayed chunk offsets still
+    have a *live* tunnel: the holder is active and remains a
+    non-neighbor of the source under the evolving overlay.  At every
+    round boundary each active source re-sprays ONLY the offsets whose
+    replication dropped below the per-offset target (holder left,
+    dropped mid-round, or became a neighbor) — in particular a rejoiner
+    re-sprays exactly the coverage it lost while absent — and reuses the
+    surviving tunnels for the rest, so the per-round obfuscation mass
+    (sigma chunks per source, Eq. 1's mixing input) is preserved while
+    fresh tunnel setups shrink to the churn-induced delta.
+
+    Requires an evolving-overlay session (``SwarmSession`` with churn or
+    ``evolve_overlay=True``): tunnel validity is a statement about the
+    persistent topology.
+    """
+
+    def __init__(self):
+        # (n_peers, m) ledgers, -1 = dead slot; grown lazily with joins.
+        self._offs: Optional[np.ndarray] = None
+        self._holds: Optional[np.ndarray] = None
+
+    def _grown(self, P: int, m: int):
+        if self._offs is None:
+            self._offs = np.full((P, m), -1, np.int64)
+            self._holds = np.full((P, m), -1, np.int64)
+        elif self._offs.shape[0] < P:
+            pad = np.full((P - self._offs.shape[0], m), -1, np.int64)
+            self._offs = np.vstack([self._offs, pad])
+            self._holds = np.vstack([self._holds, pad])
+        return self._offs, self._holds
+
+    def plan(self, ses: "SwarmSession",
+             ids: np.ndarray) -> Optional[SprayPlan]:
+        """Fully vectorized over the (source, tunnel-slot) ledger — no
+        per-peer Python loop at the round boundary (the boundary is on
+        the per-round critical path at paper-scale populations)."""
+        if not ses.evolve:
+            raise ValueError(
+                "ChurnAwareSpray needs an evolving-overlay session "
+                "(enable churn or evolve_overlay=True)")
+        cfg = ses.cfg
+        K = cfg.chunks_per_update
+        m = min(cfg.spray_copies, K)
+        if m == 0 or ids.size == 0:
+            return None
+        rng = ses.rng
+        P = ses.n_peers
+        all_offs, all_holds = self._grown(P, m)
+        R = ids.size
+        rr = np.arange(R)[:, None]
+        offs = all_offs[ids]
+        holds = all_holds[ids]
+        # Tunnel survival: holder in this round's active set and still
+        # a non-neighbor (overlay repair may have linked them).
+        in_round = np.zeros(P, dtype=bool)
+        in_round[ids] = True
+        hsafe = np.clip(holds, 0, P - 1)
+        valid = (holds >= 0) & in_round[hsafe] \
+            & ~ses.adj[ids[:, None], hsafe]
+        # Compact surviving tunnels to the front; invalid slots trail
+        # and become the fresh re-spray positions.
+        order = np.argsort(~valid, axis=1, kind="stable")
+        offs, holds = offs[rr, order], holds[rr, order]
+        keep = valid[rr, order]
+        fresh_slot = ~keep
+        # Fresh offsets: per row, distinct draws from the complement of
+        # the kept offsets — kept keys pinned to +inf, row-sorted, the
+        # j-th fresh slot takes the j-th cheapest complement offset.
+        keys = rng.random((R, K))
+        rk, ck = np.nonzero(keep)
+        keys[rk, offs[rk, ck]] = np.inf
+        oorder = np.argsort(keys, axis=1)
+        j = np.cumsum(fresh_slot, axis=1) - 1
+        offs = np.where(fresh_slot, oorder[rr, np.clip(j, 0, K - 1)],
+                        offs)
+        # Fresh targets: one uniform active non-neighbor per fresh slot
+        # (rank-pick into the stable-sorted non-neighbor columns, the
+        # RoundSimulator._spray technique).
+        nn = ~ses.adj[np.ix_(ids, ids)]
+        nn[np.arange(R), np.arange(R)] = False
+        cnt = nn.sum(axis=1)
+        can = cnt > 0
+        torder = np.argsort(~nn, axis=1, kind="stable")
+        pick = (rng.random((R, m))
+                * np.maximum(cnt, 1)[:, None]).astype(np.int64)
+        tglob = ids[torder[rr, pick]]
+        holds = np.where(fresh_slot & can[:, None], tglob, holds)
+        live = keep | (fresh_slot & can[:, None])
+        all_offs[ids] = np.where(live, offs, -1)
+        all_holds[ids] = np.where(live, holds, -1)
+        rsel, csel = np.nonzero(live)
+        if rsel.size == 0:
+            return None
+        return SprayPlan(src=rsel.astype(np.int64),
+                         tgt=np.searchsorted(ids, holds[rsel, csel]),
+                         offset=offs[rsel, csel],
+                         fresh=fresh_slot[rsel, csel])
 
 
 @dataclass
@@ -93,15 +247,24 @@ class SessionRound:
         default_factory=lambda: np.zeros(0, np.int64))
     dropped_midround: np.ndarray = field(
         default_factory=lambda: np.zeros(0, np.int64))
+    spray_plan: Optional[SprayPlan] = None
 
-    def global_log(self) -> dict:
-        """The round's transfer log with sender/receiver/owner re-keyed
-        to global peer ids (chunk ids stay local to the round)."""
-        log = dict(self.result.log)
+    def global_log(self) -> TransferTrace:
+        """The round's transfer trace with sender/receiver/owner re-keyed
+        to global peer ids and the session ``round`` column stamped
+        (chunk/descriptor ids stay local to the round's torrent)."""
+        tr = self.result.log
         ids = self.active_ids
-        for key in ("sender", "receiver", "owner"):
-            log[key] = ids[np.asarray(log[key], dtype=np.int64)]
-        return log
+        return TransferTrace(
+            K=tr.K,
+            slot=tr.slot,
+            sender=ids[np.asarray(tr.sender, np.int64)].astype(np.int32),
+            receiver=ids[np.asarray(tr.receiver,
+                                    np.int64)].astype(np.int32),
+            chunk=tr.chunk,
+            owner=ids[np.asarray(tr.owner, np.int64)].astype(np.int32),
+            b_size=tr.b_size, o_size=tr.o_size, phase=tr.phase,
+            round=np.full(len(tr), self.round_idx, dtype=np.int32))
 
 
 class SwarmSession:
@@ -133,13 +296,15 @@ class SwarmSession:
                  link_model: cap.LinkModel = cap.RESIDENTIAL,
                  bt_mode: str = "auto",
                  round_seed: Optional[Callable[[int], int]] = None,
-                 evolve_overlay: Optional[bool] = None):
+                 evolve_overlay: Optional[bool] = None,
+                 spray_policy: Optional[SprayPolicy] = None):
         if churn is None:
             churn = ChurnModel(leave_prob=float(churn_rate))
         self.cfg = cfg
         self.churn = churn
         self.link_model = link_model
         self.bt_mode = bt_mode
+        self.spray_policy = spray_policy
         self.round_seed = (round_seed if round_seed is not None
                            else lambda r: cfg.seed * 1000 + r)
         self.evolve = (churn.enabled if evolve_overlay is None
@@ -174,6 +339,18 @@ class SwarmSession:
         """Leave-clamp floor: a round needs min_degree+1 peers to mesh."""
         return self.cfg.min_degree + 1
 
+    def _rejoin_delays(self, k: int) -> np.ndarray:
+        """Per-leaver rejoin delay (rounds) under ``churn.rejoin_dist``.
+
+        ``"fixed"`` keeps the historical deterministic delay (and draws
+        nothing, so existing seeds are unperturbed); ``"geometric"``
+        samples Geometric(1/rejoin_after), mean ``rejoin_after``.
+        """
+        ra = max(self.churn.rejoin_after, 1)
+        if self.churn.rejoin_dist == "geometric":
+            return self.rng.geometric(1.0 / ra, size=k).astype(np.int64)
+        return np.full(k, ra, dtype=np.int64)
+
     def _step_membership(self, r: int):
         """Apply the churn model at the boundary before round ``r``."""
         rejoined = np.flatnonzero(self.rejoin_at == r)
@@ -201,7 +378,8 @@ class SwarmSession:
         if leaving.size:
             self.active[leaving] = False
             if self.churn.rejoin_after > 0:
-                self.rejoin_at[leaving] = r + self.churn.rejoin_after
+                self.rejoin_at[leaving] = r + self._rejoin_delays(
+                    leaving.size)
 
         # Poisson fresh joins: new global ids, sticky capacities.
         n_new = (int(self.rng.poisson(self.churn.join_rate))
@@ -306,7 +484,12 @@ class SwarmSession:
             if r > 0 and self.churn.enabled:
                 joined, left, rejoined = self._step_membership(r)
             ids = np.flatnonzero(self.active)
-            self._pending = (r, ids, joined, left, rejoined)
+            # Spray-policy hook: with the boundary applied, the policy
+            # decides what each source sprays (churn-aware budgets);
+            # None keeps the simulator's full re-spray byte-identical.
+            plan = (self.spray_policy.plan(self, ids)
+                    if self.spray_policy is not None else None)
+            self._pending = (r, ids, joined, left, rejoined, plan)
         return self._pending[1]
 
     def next_round(self, **kw) -> SessionRound:
@@ -319,7 +502,7 @@ class SwarmSession:
                   collect_maxflow: bool = False) -> SessionRound:
         """Run the dissemination round begun by :meth:`begin_round`."""
         self.begin_round()
-        r, ids, joined, left, rejoined = self._pending
+        r, ids, joined, left, rejoined, plan = self._pending
         self._pending = None
         cfg_r = self.cfg.replace(n=int(ids.size),
                                  seed=int(self.round_seed(r)))
@@ -329,14 +512,15 @@ class SwarmSession:
                 cfg_r, self.link_model, dropouts=dropouts,
                 byzantine=byzantine, bt_mode=self.bt_mode,
                 overlay=sub_adj, up=self.up[ids], down=self.down[ids],
-                rng=np.random.default_rng(cfg_r.seed))
+                rng=np.random.default_rng(cfg_r.seed),
+                spray_plan=plan)
             self._exposure[np.ix_(ids, ids)] += sub_adj
         else:
             # Back-compat path: bit-identical to the historical
             # ``simulate_round(cfg.replace(seed=round_seed(r)))`` loop.
             sim = RoundSimulator(cfg_r, self.link_model,
                                  dropouts=dropouts, byzantine=byzantine,
-                                 bt_mode=self.bt_mode)
+                                 bt_mode=self.bt_mode, spray_plan=plan)
         res = sim.run(collect_maxflow=collect_maxflow)
 
         dropped = ids[~res.active]
@@ -345,16 +529,26 @@ class SwarmSession:
             # it sits out and rejoins at a later round boundary.
             self.active[dropped] = False
             if self.churn.rejoin_after > 0:
-                self.rejoin_at[dropped] = r + 1 + self.churn.rejoin_after
+                self.rejoin_at[dropped] = r + 1 + self._rejoin_delays(
+                    dropped.size)
         rec = SessionRound(round_idx=r, active_ids=ids, result=res,
                            joined=joined, left=left, rejoined=rejoined,
-                           dropped_midround=dropped)
+                           dropped_midround=dropped, spray_plan=plan)
         self.history.append(rec)
         self.round_idx += 1
         return rec
 
     def run(self, rounds: int, **kw) -> list[SessionRound]:
         return [self.next_round(**kw) for _ in range(rounds)]
+
+    # -- cross-round observation surface ---------------------------------
+    def trace(self) -> TransferTrace:
+        """The session-wide :class:`TransferTrace`: every round's log in
+        global peer ids with the ``round`` column stamped — the input
+        cross-round adversaries (``attacks.persistent_neighbor_linkage``)
+        consume together with :meth:`pair_exposure`."""
+        return TransferTrace.concat(
+            [rec.global_log() for rec in self.history])
 
     # -- cross-round topology metrics (privacy §III-E) -------------------
     def _round_edges(self, rec: SessionRound) -> set:

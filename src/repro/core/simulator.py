@@ -23,15 +23,16 @@ from .bittorrent import bt_exact_slot, run_bt_fluid
 from .byzantine import ByzantineModel, claimed_inventory, filter_transfers
 from .maxflow import stage_upper_bound
 from .overlay import random_overlay
-from .schedulers import run_scheduler
+from .policy import SlotView, get_policy
 from .state import SwarmState
+from .trace import TransferTrace
 from .types import RoundMetrics, SwarmConfig
 
 
 @dataclass
 class RoundResult:
     metrics: RoundMetrics
-    log: dict                      # finalized transfer log (struct of arrays)
+    log: TransferTrace             # typed transfer trace (dict-compatible)
     reconstructable: np.ndarray    # (n, n) bool: A_v^r membership
     active: np.ndarray             # (n,) bool at deadline
     adj: np.ndarray
@@ -59,6 +60,7 @@ class RoundSimulator:
         up: np.ndarray | None = None,
         down: np.ndarray | None = None,
         rng: np.random.Generator | None = None,
+        spray_plan=None,
     ):
         """``overlay``/``up``/``down``/``rng`` let a :class:`SwarmSession`
         inject a persistent population (evolving topology, sticky
@@ -88,6 +90,17 @@ class RoundSimulator:
         self.byz = byzantine
         self._fail_run = np.zeros(cfg.n, dtype=np.int64)
         self.state = SwarmState(cfg, self.adj, self.up, self.down, self.rng)
+        # Warm-up scheduling policy: a registered name or a
+        # SchedulerPolicy instance (core/policy.py).  Resolved once per
+        # simulator; per-round mutable policy state is reset in run().
+        self.policy = get_policy(cfg.scheduler)
+        if not self.policy.applies_to("warmup"):
+            raise ValueError(
+                f"policy {self.policy.name!r} does not apply to the "
+                f"warm-up phase (phases={self.policy.phases})")
+        # Session-computed spray plan (churn-aware spray budgets); None
+        # keeps the historical full re-spray path byte-identical.
+        self.spray_plan = spray_plan
 
     # ------------------------------------------------------------------
     def _spray(self):
@@ -101,6 +114,14 @@ class RoundSimulator:
         if sigma == 0:
             return
         K = cfg.chunks_per_update
+        if self.spray_plan is not None:
+            # Session-provided plan (e.g. ChurnAwareSpray): explicit
+            # (source, target, offset) triples, drawn from the session
+            # stream — the simulator stream is left untouched.
+            src, tgt, off = self.spray_plan.as_local_arrays()
+            st.apply_transfers(src, tgt, src * K + off, phase_code=0,
+                               consume_slot=False)
+            return
         # Vectorized over all sources at once: no per-client Python loop.
         nn = ~self.adj          # fresh array; safe to edit the diagonal
         np.fill_diagonal(nn, False)
@@ -166,14 +187,16 @@ class RoundSimulator:
 
         ubs: list[int] = []
         # ---- warm-up (§III-B) ----
-        flood_state: dict = {}
+        pol = self.policy
+        pol.reset(cfg)               # per-round policy state (flooding)
+        view = SlotView(st, pol.visibility)
         idle = 0
         while not st.warmup_done() and st.slot < cfg.s_max:
             self._apply_dropouts()
             if collect_maxflow:
                 ubs.append(stage_upper_bound(st))
             snd, rcv, chk = self._schedule_filtered(
-                lambda: run_scheduler(st, flood_state))
+                lambda: pol.schedule(view))
             st.apply_transfers(snd, rcv, chk, phase_code=1)
             st.slot += 1
             # Stall guard: lags leave early slots empty, and a receiver

@@ -21,6 +21,7 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from .trace import TransferTrace
 from .types import SwarmConfig
 
 
@@ -47,23 +48,22 @@ class TransferLog:
         self.o_sizes.append(np.asarray(o, dtype=np.int64))
         self.phases.append(np.full(len(snd), phase, dtype=np.int8))
 
-    def finalize(self, chunks_per_update: int) -> dict:
+    def finalize(self, chunks_per_update: int) -> TransferTrace:
+        """Concatenate the per-slot pieces into one typed trace."""
         if not self.slots:
-            empty = np.zeros(0, dtype=np.int64)
-            return {k: empty for k in
-                    ("slot", "sender", "receiver", "chunk", "owner",
-                     "b_size", "o_size", "phase")}
-        out = {
-            "slot": np.concatenate(self.slots),
-            "sender": np.concatenate(self.senders),
-            "receiver": np.concatenate(self.receivers),
-            "chunk": np.concatenate(self.chunks),
-            "b_size": np.concatenate(self.b_sizes),
-            "o_size": np.concatenate(self.o_sizes),
-            "phase": np.concatenate(self.phases),
-        }
-        out["owner"] = out["chunk"] // chunks_per_update
-        return out
+            return TransferTrace(K=chunks_per_update)
+        chunk = np.concatenate(self.chunks)
+        return TransferTrace.from_arrays(
+            K=chunks_per_update,
+            slot=np.concatenate(self.slots),
+            sender=np.concatenate(self.senders),
+            receiver=np.concatenate(self.receivers),
+            chunk=chunk,
+            owner=(chunk // chunks_per_update).astype(np.int32),
+            b_size=np.concatenate(self.b_sizes),
+            o_size=np.concatenate(self.o_sizes),
+            phase=np.concatenate(self.phases),
+        )
 
 
 class SwarmState:

@@ -15,9 +15,12 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, TYPE_CHECKING
 
 import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover - annotation only
+    from .policy import SchedulerPolicy  # noqa: F401
 
 
 @dataclass(frozen=True)
@@ -53,7 +56,11 @@ class SwarmConfig:
     enable_gating: bool = True       # K (cover-set gating + throttle)
     enable_nonowner_first: bool = True
 
-    scheduler: str = "greedy_fastest_first"
+    # Warm-up scheduling policy: a name registered in core/policy.py
+    # ("greedy_fastest_first", "random_fifo", "random_fastest_first",
+    # "distributed", "flooding", or any plugin) or a SchedulerPolicy
+    # instance — `cfg.replace(scheduler=MyPolicy())` round-trips.
+    scheduler: "str | SchedulerPolicy" = "greedy_fastest_first"
     # Slot-engine implementation: "batched" resolves the per-slot
     # assignment with vectorized budgeted rounds over all receivers at
     # once (paper-scale swarms); "loop" is the reference per-receiver

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ChurnModel, SwarmConfig, SwarmSession
+from repro.core import (ChurnAwareSpray, ChurnModel, SwarmConfig,
+                        SwarmSession)
 from repro.core.aggregation import fedavg_pytree, per_client_aggregates
 from repro.core.chunking import chunk_count, flatten_update
 from repro.data.partition import partition
@@ -53,6 +54,13 @@ class FLConfig:
     # the historical full-participation loop, bit-identical.
     churn_rate: float = 0.0
     rejoin_after: int = 2
+    # Rejoin-delay law: "fixed" (historical) or "geometric" (mean
+    # rejoin_after, heterogeneous absences).
+    rejoin_dist: str = "fixed"
+    # Spray budgeting under churn: "full" re-sprays sigma fresh tunnels
+    # per source every round (historical); "churn_aware" re-sprays only
+    # coverage lost to churn (ChurnAwareSpray; needs churn_rate > 0).
+    spray_budget: str = "full"
 
 
 @dataclass
@@ -129,9 +137,15 @@ def run_experiment(method: str, cfg: FLConfig) -> FLResult:
         # capacities across rounds; round_seed keeps the historical
         # seed*1000+r per-round streams, so churn_rate=0 reproduces the
         # old per-round simulate_round loop bit-identically.
-        session = SwarmSession(scfg, churn=ChurnModel(
-            leave_prob=cfg.churn_rate, join_rate=0.0,
-            rejoin_after=cfg.rejoin_after))
+        if cfg.spray_budget not in ("full", "churn_aware"):
+            raise ValueError(f"unknown spray_budget {cfg.spray_budget!r}")
+        session = SwarmSession(
+            scfg,
+            churn=ChurnModel(leave_prob=cfg.churn_rate, join_rate=0.0,
+                             rejoin_after=cfg.rejoin_after,
+                             rejoin_dist=cfg.rejoin_dist),
+            spray_policy=(ChurnAwareSpray()
+                          if cfg.spray_budget == "churn_aware" else None))
         # Per-client held model: a reference to some past global params.
         # Clients absent in a round keep a stale reference and re-sync
         # at their rejoin boundary.

@@ -1,0 +1,175 @@
+"""SchedulerPolicy plugin API (core/policy.py): golden byte-identity of
+the six built-in policies vs the historical string dispatch, registry
+round-trips, visibility enforcement, phase applicability, and typed
+policy-owned flooding state."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (SwarmConfig, SchedulerPolicy, SlotView,
+                        VisibilityError, get_policy, policy_names,
+                        register_policy, simulate_round)
+from repro.core.schedulers import (CENTRALIZED, FloodingPolicy,
+                                   FloodRoundState, VanillaBTPolicy)
+from repro.core.state import SwarmState
+from repro.core.overlay import random_overlay
+
+from capture_golden import IMPLS, MODES, SEEDS, log_digest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = json.load(open(os.path.join(HERE, "golden_schedules.json")))
+
+
+def _cfg(mode, seed, impl):
+    return SwarmConfig(n=16, chunks_per_update=24, s_max=5000, seed=seed,
+                       scheduler=mode, scheduler_impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# Byte-identity: new API == old string dispatch, seed for seed
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("mode", MODES)
+def test_policy_schedules_byte_identical_to_golden(mode, impl):
+    """All five §III-C modes + flooding reproduce the pinned pre-policy
+    schedules bit-for-bit on both slot engines, by name AND instance."""
+    for seed in SEEDS:
+        want = GOLDEN["schedules"][f"{mode}/{impl}/{seed}"]
+        by_name = simulate_round(_cfg(mode, seed, impl))
+        assert log_digest(by_name.log) == want, (mode, impl, seed)
+        inst = get_policy(mode)
+        by_inst = simulate_round(
+            _cfg(mode, seed, impl).replace(scheduler=inst))
+        assert log_digest(by_inst.log) == want, (mode, impl, seed)
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trips
+# ---------------------------------------------------------------------------
+
+def test_registry_roundtrip_name_instance_replace():
+    for name in MODES:
+        pol = get_policy(name)
+        assert pol.name == name
+        assert get_policy(pol) is pol              # instances pass through
+        assert type(get_policy(type(pol))) is type(pol)   # classes too
+        cfg = SwarmConfig(scheduler=name).replace(scheduler=pol)
+        assert cfg.scheduler is pol
+        assert cfg.replace(scheduler=pol.name).scheduler == name
+    assert set(MODES) <= set(policy_names())
+    assert "bt_vanilla" in policy_names()
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        get_policy("nope")
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        simulate_round(SwarmConfig(n=12, chunks_per_update=8, s_max=50,
+                                   min_degree=4, scheduler="nope"))
+
+
+def test_register_policy_validates():
+    with pytest.raises(TypeError):
+        register_policy(dict)
+    with pytest.raises(ValueError, match="non-empty"):
+        register_policy(type("Anon", (SchedulerPolicy,), {}))
+
+
+def test_plugin_policy_runs_by_instance_and_name():
+    class HalfFlood(FloodingPolicy):
+        name = "half_flood_test"
+    register_policy(HalfFlood)
+    res = simulate_round(SwarmConfig(n=12, chunks_per_update=12,
+                                     s_max=3000, seed=1,
+                                     scheduler="half_flood_test"))
+    assert not res.metrics.failed_open
+    res2 = simulate_round(SwarmConfig(n=12, chunks_per_update=12,
+                                      s_max=3000, seed=1,
+                                      scheduler=HalfFlood()))
+    assert np.array_equal(res.log["chunk"], res2.log["chunk"])
+
+
+# ---------------------------------------------------------------------------
+# Visibility enforcement + phase applicability
+# ---------------------------------------------------------------------------
+
+def _state(seed=0, n=10, K=8):
+    cfg = SwarmConfig(n=n, chunks_per_update=K, s_max=100, seed=seed)
+    rng = np.random.default_rng(seed)
+    adj = random_overlay(n, 4, 0.1, rng)
+    up = np.full(n, 3)
+    down = np.full(n, 6)
+    return SwarmState(cfg, adj, up, down, rng)
+
+
+def test_slotview_gates_by_visibility():
+    st = _state()
+    full = SlotView(st, "full")
+    full.supply()                       # ok
+    full.candidate_columns()
+    full.availability_union()
+    _ = full.state
+
+    nbr = SlotView(st, "neighborhood")
+    nbr.availability_union()            # ok
+    with pytest.raises(VisibilityError):
+        nbr.supply()
+    with pytest.raises(VisibilityError):
+        _ = nbr.state
+
+    none = SlotView(st, "none")
+    none.my_eligible(0)                 # sender self-knowledge: always ok
+    none.resolve_requests(np.array([0]), np.array([0]))
+    with pytest.raises(VisibilityError):
+        none.availability_union()
+    with pytest.raises(VisibilityError):
+        none.candidate_columns()
+
+    with pytest.raises(ValueError):
+        SlotView(st, "psychic")
+
+
+def test_builtin_policies_declare_paper_visibility():
+    for name in CENTRALIZED:
+        assert get_policy(name).visibility == "full"
+    assert get_policy("distributed").visibility == "neighborhood"
+    assert get_policy("flooding").visibility == "none"
+
+
+def test_bt_policy_rejected_for_warmup():
+    """Phase applicability: a ("bt",)-only policy cannot drive warm-up."""
+    assert VanillaBTPolicy().applies_to("bt")
+    assert not VanillaBTPolicy().applies_to("warmup")
+    with pytest.raises(ValueError, match="warm-up"):
+        simulate_round(SwarmConfig(n=12, chunks_per_update=8, s_max=50,
+                                   min_degree=4, scheduler="bt_vanilla"))
+
+
+# ---------------------------------------------------------------------------
+# Typed flooding state (no caller-threaded dicts)
+# ---------------------------------------------------------------------------
+
+def test_flooding_state_owned_and_reset_per_round():
+    pol = get_policy("flooding")
+    assert isinstance(pol.round_state, FloodRoundState)
+    cfg = SwarmConfig(n=12, chunks_per_update=12, s_max=3000, seed=2,
+                      scheduler=pol)
+    simulate_round(cfg)
+    filled = len(pol.round_state.sent)
+    assert filled > 0                       # the round used the memory
+    pol.reset(cfg)
+    assert len(pol.round_state.sent) == 0   # fresh per round
+    # no-repeat invariant recorded in the typed state: every warm-up
+    # (sender, receiver, chunk) push is unique within the round
+    res = simulate_round(cfg)
+    for (u, v), chunks in pol.round_state.sent.items():
+        assert isinstance(chunks, set)
+    log = res.log
+    warm = log["phase"] == 1
+    triples = list(zip(log["sender"][warm].tolist(),
+                       log["receiver"][warm].tolist(),
+                       log["chunk"][warm].tolist()))
+    assert len(triples) == len(set(triples))

@@ -1,0 +1,163 @@
+"""TransferTrace: typed observation contract (core/trace.py).
+
+Covers dict-compatibility of the trace, golden-exact attack numbers,
+vectorized-vs-reference scorer equivalence on identical seeds,
+round/phase slicing + observer masking, cross-round concatenation from
+SwarmSession, and the trace-based audit path."""
+import itertools
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (ChurnModel, SwarmConfig, SwarmSession,
+                        TransferTrace, simulate_round)
+from repro.core.attacks import ATTACKS, ATTACKS_REFERENCE
+from repro.core.audit import directives_from_trace, verify_directives
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = json.load(open(os.path.join(HERE, "golden_schedules.json")))
+
+
+# ---------------------------------------------------------------------------
+# dict-compat + views
+# ---------------------------------------------------------------------------
+
+def test_trace_mapping_protocol_and_views():
+    cfg = SwarmConfig(n=14, chunks_per_update=12, s_max=4000, seed=1)
+    res = simulate_round(cfg)
+    tr = res.log
+    assert isinstance(tr, TransferTrace)
+    assert tr.K == cfg.chunks_per_update
+    # mapping protocol: legacy dict consumers keep working
+    d = dict(tr)
+    assert set(d) == set(tr.keys())
+    assert np.array_equal(d["chunk"], tr.chunk)
+    assert "slot" in tr and tr.get("nope") is None
+    with pytest.raises(KeyError):
+        tr["nope"]
+    # round-trip through from_log
+    tr2 = TransferTrace.from_log(d, K=tr.K)
+    for k in tr.keys():
+        assert np.array_equal(tr[k], tr2[k]), k
+    assert TransferTrace.from_log(tr) is tr
+    # phase slicing partitions the trace
+    n_parts = sum(len(tr.phase_slice(p)) for p in ("spray", "warmup", "bt"))
+    assert n_parts == len(tr)
+    assert np.all(tr.warmup().phase == 1)
+    # observer masking: only the coalition's rows
+    obs = np.array([0, 3])
+    v = tr.observed_by(obs)
+    assert np.isin(v.receiver, obs).all()
+    assert len(v) == int(np.isin(tr.receiver, obs).sum())
+    # descriptor mapping
+    assert np.array_equal(tr.desc(), tr.chunk // cfg.chunks_per_update)
+    with pytest.raises(ValueError):
+        TransferTrace().desc()
+
+
+def test_trace_concat_and_round_column():
+    cfg = SwarmConfig(n=14, chunks_per_update=10, min_degree=4,
+                      s_max=4000, seed=2)
+    ses = SwarmSession(cfg, churn=ChurnModel(leave_prob=0.25,
+                                             rejoin_after=1))
+    recs = ses.run(4)
+    tr = ses.trace()
+    assert np.array_equal(tr.rounds(), np.arange(4))
+    for r, rec in enumerate(recs):
+        part = tr.rounds_slice(r)
+        glog = rec.global_log()
+        assert len(part) == len(glog)
+        for k in ("slot", "sender", "receiver", "chunk", "owner"):
+            assert np.array_equal(part[k], glog[k]), (r, k)
+        # global ids: senders within the round's active set
+        assert set(np.unique(part.sender)) <= set(
+            rec.active_ids.tolist())
+    # grading lookup maps each round's descriptors to global owners
+    grade = tr.desc_owner_lookup()
+    warm = tr.warmup()
+    got = grade(warm.round, warm.desc())
+    assert np.array_equal(got, warm.owner)
+    assert grade(np.array([99]), np.array([0]))[0] == -1
+
+
+# ---------------------------------------------------------------------------
+# attacks: golden exactness + vectorized == reference
+# ---------------------------------------------------------------------------
+
+def _golden_cfgs():
+    yield "full", {}
+    yield "none", dict(enable_preround=False, enable_timelag=False,
+                       enable_gating=False, enable_nonowner_first=False)
+
+
+@pytest.mark.parametrize("name,kw", list(_golden_cfgs()))
+@pytest.mark.parametrize("seed", [0, 1])
+def test_attack_numbers_reproduce_exactly_from_trace(name, kw, seed):
+    """Figs. 6-7 inputs: ASR numbers from the TransferTrace path are
+    bit-identical to the pinned pre-trace dict path."""
+    cfg = SwarmConfig(n=24, chunks_per_update=24, s_max=5000, seed=seed,
+                      scheduler_impl="loop", **kw)
+    res = simulate_round(cfg)
+    reps = {a: fn(res.log, np.arange(6), 24) for a, fn in ATTACKS.items()}
+    pooled = {a: fn(res.log, np.arange(12), 24, pooled=True)
+              for a, fn in ATTACKS.items()}
+    for a, want in GOLDEN["attacks"][f"{name}/{seed}"].items():
+        assert reps[a].max_asr == want["max"]
+        assert reps[a].mean_asr == want["mean"]
+        assert reps[a].n_decisions == want["n"]
+        assert pooled[a].max_asr == want["pooled_max"]
+        assert pooled[a].any_correct_rate == want["pooled_any"]
+
+
+@pytest.mark.parametrize("seed,sched", list(itertools.product(
+    (2, 5, 11), ("greedy_fastest_first", "distributed", "flooding"))))
+def test_vectorized_scorers_match_reference(seed, sched):
+    """Trace <-> legacy-dict equivalence: the vectorized scorers make
+    the reference implementations' decisions exactly, solo and pooled,
+    on both trace and raw-dict input."""
+    cfg = SwarmConfig(n=20, chunks_per_update=16, s_max=5000, seed=seed,
+                      min_degree=5, scheduler=sched)
+    res = simulate_round(cfg)
+    as_dict = dict(res.log)
+    for pooled in (False, True):
+        for a in ATTACKS:
+            rv = ATTACKS[a](res.log, np.arange(5), 16, pooled=pooled)
+            rd = ATTACKS[a](as_dict, np.arange(5), 16, pooled=pooled)
+            rr = ATTACKS_REFERENCE[a](res.log, np.arange(5), 16,
+                                      pooled=pooled)
+            for got in (rv, rd):
+                assert got.asr_per_observer == rr.asr_per_observer
+                assert got.max_asr == rr.max_asr
+                assert got.mean_asr == rr.mean_asr
+                assert got.n_decisions == rr.n_decisions
+                assert got.any_correct_rate == rr.any_correct_rate
+
+
+# ---------------------------------------------------------------------------
+# audit over the trace
+# ---------------------------------------------------------------------------
+
+def test_audit_verifies_simulated_trace():
+    cfg = SwarmConfig(n=14, chunks_per_update=12, s_max=4000, seed=4)
+    res = simulate_round(cfg)
+    dirs = directives_from_trace(res.log)
+    assert len(dirs) == int((res.log.phase == 1).sum())
+    # the simulator's own warm-up schedule audits clean
+    assert verify_directives(res.adj, dirs, res.up, res.down) == []
+    assert verify_directives(res.adj, res.log, res.up, res.down) == []
+    # tampering is caught: non-adjacent directive
+    u, v = map(int, np.argwhere(~res.adj)[1])
+    bad = dirs + [(0, u, v, 0)]
+    out = verify_directives(res.adj, bad, res.up, res.down)
+    assert any("non-adjacent" in msg for msg in out)
+    # duplicate delivery is caught, logged retry is not (the retry goes
+    # to an otherwise-empty late slot so per-stage caps stay clean)
+    retry_slot = max(d[0] for d in dirs) + 1
+    dup = dirs + [(retry_slot, *dirs[0][1:])]
+    out = verify_directives(res.adj, dup, res.up, res.down)
+    assert any("redundant" in msg for msg in out)
+    out = verify_directives(res.adj, dup, res.up, res.down,
+                            retries={(dirs[0][2], dirs[0][3])})
+    assert out == []
