@@ -1,0 +1,162 @@
+"""repro.net benchmark: wall-clock round anatomy on the event engine.
+
+Three claims, measured honestly in seconds (not slots):
+
+* **warm-up share** — the paper's "warm-up is a stable ~12% share of a
+  round" at paper scale (K=206, 256 KiB chunks, residential links)
+  across n in {100, 200, 500};
+* **LLM-scale overhead** — FLTorrent vs BT-only on 7-10 Gbps links
+  lands in the paper's ~6-10% band (the fig8 measurement, one model
+  here as the regression anchor);
+* **time-domain bandwidth efficiency** — realized warm-up transport
+  seconds vs the per-cycle congestion lower bound
+  (:func:`repro.core.maxflow.warmup_time_bounds`), the seconds-domain
+  companion of the ~92%-of-max-flow claim.
+
+Plus the cross-validation anchor: the event engine must reproduce the
+slot engine's per-cycle transfer counts exactly (same schedules, real
+clock).
+
+    python benchmarks/bench_net.py [--quick]
+
+Emits ``results/bench/BENCH_net.json``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import numpy as np  # noqa: E402
+
+from common import banner, save  # noqa: E402
+from repro.core import SwarmConfig  # noqa: E402
+from repro.core.capacities import DATACENTER, RESIDENTIAL  # noqa: E402
+from repro.core.maxflow import warmup_time_bounds  # noqa: E402
+from repro.core.simulator import RoundSimulator  # noqa: E402
+from repro.net import (DATACENTER_NET, RESIDENTIAL_NET,  # noqa: E402
+                       NetConfig)
+
+SHARE_BAND = (0.08, 0.16)        # ~12% +/- 4
+OVERHEAD_BAND = (4.0, 12.0)      # ~6-10%, with measurement slack
+
+
+def _event_round(cfg, link_model, net, **kw):
+    sim = RoundSimulator(cfg, link_model, time_engine="event", net=net,
+                         **kw)
+    return sim, sim.run()
+
+
+def warm_share_sweep(ns, seed=0):
+    rows = []
+    for n in ns:
+        cfg = SwarmConfig(n=n, chunks_per_update=206, s_max=50_000,
+                          seed=seed)
+        t0 = time.time()
+        sim, res = _event_round(cfg, RESIDENTIAL, RESIDENTIAL_NET,
+                                bt_mode="fluid")
+        m = res.metrics
+        rows.append({
+            "n": n,
+            "t_warm_s": round(m.t_warm_s, 1),
+            "t_round_s": round(m.t_round_s, 1),
+            "warmup_share_s": round(m.warmup_share_s, 4),
+            "control_s": round(m.control_s, 1),
+            "spray_s": round(m.t_spray_s, 1),
+            "sim_seconds": round(time.time() - t0, 1),
+        })
+        print(f"n={n:4d}  t_warm={m.t_warm_s:7.1f}s "
+              f"t_round={m.t_round_s:8.1f}s share={m.warmup_share_s:.1%} "
+              f"(sim {rows[-1]['sim_seconds']:.0f}s)")
+    return rows
+
+
+def llm_overhead(n=50, model_bytes=7e9 * 2):
+    chunk = 4 * 2**20
+    K = int(-(-model_bytes // chunk))
+    m = min(n - 1, 10)
+    base_cfg = SwarmConfig(
+        n=n, chunks_per_update=K, chunk_bytes=chunk, s_max=10**7,
+        seed=0, min_degree=m, enable_gating=False, enable_preround=False,
+        enable_timelag=False, enable_nonowner_first=False,
+        warmup_threshold_pct=0.0)
+    full_cfg = SwarmConfig(n=n, chunks_per_update=K, chunk_bytes=chunk,
+                           s_max=10**7, seed=0, min_degree=m)
+    _, b = _event_round(base_cfg, DATACENTER, DATACENTER_NET,
+                        bt_mode="fluid")
+    _, f = _event_round(full_cfg, DATACENTER, DATACENTER_NET,
+                        bt_mode="fluid")
+    ovh = 100 * (f.metrics.t_round_s - b.metrics.t_round_s) \
+        / b.metrics.t_round_s
+    print(f"LLM overhead (n={n}, K={K}): {ovh:+.2f}% "
+          f"(BT {b.metrics.t_round_s:.0f}s -> FLT "
+          f"{f.metrics.t_round_s:.0f}s)")
+    return {"n": n, "chunks": K, "bt_only_s": round(b.metrics.t_round_s, 1),
+            "fltorrent_s": round(f.metrics.t_round_s, 1),
+            "overhead_pct": round(ovh, 2)}
+
+
+def time_domain_efficiency(n=100, seed=0):
+    """Realized warm-up transport seconds vs congestion lower bound."""
+    cfg = SwarmConfig(n=n, chunks_per_update=206, s_max=50_000,
+                      seed=seed)
+    net = NetConfig()           # zero latency: realized is exact
+    sim, res = _event_round(cfg, RESIDENTIAL, net, bt_mode="fluid")
+    lbs, real = warmup_time_bounds(res.log, cfg.chunk_bytes,
+                                   sim.up_bps, sim.down_bps)
+    eff = float(lbs.sum() / max(real.sum(), 1e-12))
+    print(f"time-domain efficiency (n={n}, GFF): {eff:.3f} "
+          f"of the bandwidth-optimal bound")
+    return {"n": n, "efficiency": round(eff, 4),
+            "lb_s": round(float(lbs.sum()), 1),
+            "realized_s": round(float(real.sum()), 1)}
+
+
+def counts_parity(n=60, K=64, seed=0):
+    """Event engine == slot engine, transfer for transfer."""
+    cfg = SwarmConfig(n=n, chunks_per_update=K, s_max=20_000, seed=seed)
+    rs = RoundSimulator(cfg).run()
+    re = RoundSimulator(cfg, time_engine="event",
+                        net=NetConfig(tracker_rtt_s=0.0)).run()
+    ok = (len(rs.log) == len(re.log)
+          and bool(np.array_equal(rs.log.chunk, re.log.chunk))
+          and bool(np.array_equal(rs.log.slot, re.log.slot)))
+    print(f"slot/event schedule parity (n={n}, K={K}): "
+          f"{'OK' if ok else 'BROKEN'}")
+    return ok
+
+
+def run(fast: bool = False):
+    banner("BENCH repro.net — wall-clock rounds on the event engine")
+    ns = (100, 200) if fast else (100, 200, 500)
+    shares = warm_share_sweep(ns)
+    share_ok = all(SHARE_BAND[0] <= r["warmup_share_s"] <= SHARE_BAND[1]
+                   for r in shares)
+    ovh = llm_overhead(n=24 if fast else 50)
+    ovh_ok = OVERHEAD_BAND[0] <= ovh["overhead_pct"] <= OVERHEAD_BAND[1]
+    eff = time_domain_efficiency(n=60 if fast else 100)
+    parity = counts_parity()
+    print(f"\nwarm-share band {'OK' if share_ok else 'VIOLATED'}; "
+          f"overhead band {'OK' if ovh_ok else 'VIOLATED'}")
+    payload = {
+        "bench": "net",
+        "date": time.strftime("%Y-%m-%d %H:%M:%S"),
+        "warm_share": shares,
+        "share_band": SHARE_BAND,
+        "share_band_ok": share_ok,
+        "llm_overhead": ovh,
+        "overhead_band": OVERHEAD_BAND,
+        "overhead_band_ok": ovh_ok,
+        "time_domain": eff,
+        "counts_parity_ok": parity,
+    }
+    save("BENCH_net", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run(fast="--quick" in sys.argv)

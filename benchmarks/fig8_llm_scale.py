@@ -5,6 +5,15 @@ datacenter-class 7-10 Gbps links.
 Paper overheads: Gemma-7B +9.97%, DeepSeek-R1-14B +6.60%,
 Qwen2.5-32B +7.09%, Llama-3.3-70B +10.01% (i.e. ~6-10%).
 
+Measured on the **event engine** (``time_engine="event"``,
+:mod:`repro.net`): round times are wall-clock seconds — fair-share
+flow makespans plus the tracker control plane (directive RTT +
+per-cycle assignment solve, the real coordination cost at 10^4-10^5
+pieces) — not slot counts.  The slot engine's quantized numbers are
+reported alongside for contrast: it charges warm-up and BT stages the
+same flat Δ, so the coordination overhead the paper measures is
+invisible there (overhead ~ -0.3%).
+
 Artifacts are bf16 checkpoints; BitTorrent piece size is 4 MiB (the
 usual choice for multi-GB payloads; the paper's 256 KiB pieces at 51 MB
 scale would yield ~10^5 pieces per update here).
@@ -13,6 +22,7 @@ from __future__ import annotations
 
 from repro.core import SwarmConfig, simulate_round
 from repro.core.capacities import DATACENTER
+from repro.net import DATACENTER_NET
 
 from .common import banner, save
 
@@ -27,7 +37,7 @@ MODELS = {
 CHUNK = 4 * 2**20                      # 4 MiB pieces
 
 
-def run(n: int = 50, fast: bool = False):
+def run(n: int = 50, fast: bool = False, net=DATACENTER_NET):
     """n peers on the paper's standard m=10 overlay; datacenter links.
     (A complete small cluster hides warm-up inefficiency entirely —
     coordination overhead needs a sparse overlay to show up.)"""
@@ -49,17 +59,37 @@ def run(n: int = 50, fast: bool = False):
             n=n, chunks_per_update=K, chunk_bytes=CHUNK, s_max=10**7,
             seed=0, min_degree=m)
         base = simulate_round(base_cfg, link_model=DATACENTER,
-                              bt_mode="fluid").metrics
+                              bt_mode="fluid", time_engine="event",
+                              net=net).metrics
         full = simulate_round(full_cfg, link_model=DATACENTER,
-                              bt_mode="fluid").metrics
-        ovh = (full.t_round - base.t_round) / base.t_round
-        rows[name] = {"chunks": K, "bt_only_s": int(base.t_round),
-                      "fltorrent_s": int(full.t_round),
-                      "overhead_pct": round(100 * ovh, 2)}
-        print(f"{name:18s} K={K:6d} BT-only={base.t_round:6d}s "
-              f"FLTorrent={full.t_round:6d}s overhead={ovh:+.2%}")
-    print("\n(paper: +6% .. +10%)")
-    save("fig8_llm_scale", {"n": n, "chunk_bytes": CHUNK, "rows": rows})
+                              bt_mode="fluid", time_engine="event",
+                              net=net).metrics
+        ovh = (full.t_round_s - base.t_round_s) / base.t_round_s
+        slot_ovh = (full.t_round - base.t_round) / base.t_round
+        rows[name] = {
+            "chunks": K,
+            "bt_only_s": round(base.t_round_s, 1),
+            "fltorrent_s": round(full.t_round_s, 1),
+            "overhead_pct": round(100 * ovh, 2),
+            "warmup_share": round(full.warmup_share_s, 4),
+            "control_s": round(full.control_s, 1),
+            "spray_s": round(full.t_spray_s, 1),
+            "slot_overhead_pct": round(100 * slot_ovh, 2),
+        }
+        print(f"{name:18s} K={K:6d} BT-only={base.t_round_s:8.1f}s "
+              f"FLTorrent={full.t_round_s:8.1f}s overhead={ovh:+.2%} "
+              f"(warm share {full.warmup_share_s:.1%}, "
+              f"slot-engine ovh {slot_ovh:+.2%})")
+    vals = [r["overhead_pct"] for r in rows.values()]
+    in_band = all(4.0 <= v <= 12.0 for v in vals)
+    print(f"\n(paper: +6% .. +10%; measured "
+          f"{min(vals):+.2f}% .. {max(vals):+.2f}%, "
+          f"{'IN' if in_band else 'OUT OF'} band)")
+    save("fig8_llm_scale", {"n": n, "chunk_bytes": CHUNK,
+                            "time_engine": "event",
+                            "tracker_rtt_s": net.tracker_rtt_s,
+                            "tracker_solve_s": net.tracker_solve_s,
+                            "overhead_band_ok": in_band, "rows": rows})
     return rows
 
 

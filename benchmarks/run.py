@@ -20,15 +20,16 @@ def main(argv=None):
     args = ap.parse_args(argv)
     fast = not args.full
 
-    from . import (bench_attacks, bench_session, fig3_utilization,
-                   fig4_decomposition, fig5_threshold, fig6_7_asr,
-                   fig8_llm_scale, roofline, table2_learning,
-                   table3_scaling)
+    from . import (bench_attacks, bench_net, bench_session,
+                   fig3_utilization, fig4_decomposition, fig5_threshold,
+                   fig6_7_asr, fig8_llm_scale, roofline,
+                   table2_learning, table3_scaling)
 
     suite = {
         "table2": lambda: table2_learning.run(fast=fast),
         "session": lambda: bench_session.run(fast=fast),
         "attacks": lambda: bench_attacks.run(fast=fast),
+        "net": lambda: bench_net.run(fast=fast),
         "fig3": lambda: fig3_utilization.run(fast=fast),
         "fig4": lambda: fig4_decomposition.run(fast=fast),
         "fig5": lambda: fig5_threshold.run(fast=fast),

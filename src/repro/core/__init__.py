@@ -3,7 +3,11 @@
 Public API:
 
 * ``SwarmConfig`` / ``simulate_round`` — one privacy-hardened
-  dissemination round (spray -> warm-up -> BitTorrent -> deadline).
+  dissemination round (spray -> warm-up -> BitTorrent -> deadline),
+  on either time engine: the synchronous slot clock or the
+  continuous-time event transport of :mod:`repro.net`
+  (``simulate_round(cfg, time_engine="event")`` — wall-clock seconds,
+  fair-share flows, per-transfer ``t_start``/``t_end``).
 * ``SwarmSession`` / ``ChurnModel`` — the persistent multi-round swarm:
   cross-round churn (leave/join/rejoin at round boundaries), evolving
   overlay with incremental edge repair, capacity persistence (§III-E).
@@ -18,8 +22,9 @@ Public API:
   consumed by attacks/privacy/audit (round/phase slicing, observer
   masking, cross-round concatenation via ``SwarmSession.trace()``).
 * ``privacy`` — Eq. (1)-(5) unlinkability bounds + empirical checks.
-* ``attacks`` — vectorized Sequential/Amount Greedy + Clustering and
-  the cross-round persistent-neighbor linkage adversary, ASR metrics.
+* ``attacks`` — vectorized Sequential/Amount Greedy + Clustering, the
+  cross-round persistent-neighbor linkage adversary, and the timing
+  side-channel attribution over event-engine traces; ASR metrics.
 * ``aggregation`` — FedAvg over the reconstructable active set.
 * ``chunking`` — update <-> chunks + torrent descriptors.
 * ``audit`` — commit-then-reveal tracker accountability.

@@ -44,8 +44,16 @@ def bt_exact_slot(state: SwarmState):
     return _BT_POLICY.schedule(SlotView(state, _BT_POLICY.visibility))
 
 
-def run_bt_fluid(state: SwarmState, s_max: int) -> int:
-    """Run the fluid BT phase to completion; returns slots consumed.
+def run_bt_fluid(state: SwarmState, s_max: int) -> float:
+    """Run the fluid BT phase to completion; returns *effective* slots.
+
+    The return value is real-valued: the final iteration usually moves
+    less than a full slot's worth of chunks, so it is credited
+    fractionally (``sent_last / peak_sent``) — the event engine
+    (:mod:`repro.net`) books ``effective_slots * slot_seconds`` of wall
+    clock instead of rounding the tail up to a whole slot.  The integer
+    state (``state.slot``, ``per_slot_sent``) keeps the historical
+    whole-slot accounting.
 
     Mutates ``state.bt_sent`` and ``state.per_slot_sent`` only (count
     space).  ``state.have`` is left at its warm-up value; callers that
@@ -61,6 +69,7 @@ def run_bt_fluid(state: SwarmState, s_max: int) -> int:
     adj = state.adj
 
     slots = 0
+    sent_hist: list[float] = []
     while slots < s_max:
         need = np.where(active, C - got, 0.0)
         if (need <= 1e-9).all():
@@ -83,16 +92,23 @@ def run_bt_fluid(state: SwarmState, s_max: int) -> int:
             wsum = weight.sum(axis=0)
             wsum = np.where(wsum > 0, wsum, 1.0)
             ask = weight * (want[None, :] / wsum)          # (u, v)
-            ask = np.minimum(ask, avail)
+            # Clamp at zero: fp drift can push ``avail`` (and with a
+            # tiny ``tot`` the rescale below) negative, which used to
+            # explode ``inflow`` into huge negative "transfers" that
+            # the integer slot accounting silently swallowed.
+            ask = np.clip(ask, 0.0, np.maximum(avail, 0.0))
             # Senders scale down if oversubscribed.
             tot = ask.sum(axis=1)
-            scale = np.where(tot > rem_up, rem_up / np.maximum(tot, 1e-12), 1.0)
+            scale = np.where(tot > rem_up,
+                             np.maximum(rem_up, 0.0)
+                             / np.maximum(tot, 1e-12), 1.0)
             give = ask * scale[:, None]
             inflow += give.sum(axis=0)
             rem_up -= give.sum(axis=1)
             avail -= give
         got += inflow
         sent = float(inflow.sum())
+        sent_hist.append(sent)
         state.per_slot_sent.append(int(round(sent)))
         state.bt_sent += int(round(sent))
         slots += 1
@@ -102,4 +118,9 @@ def run_bt_fluid(state: SwarmState, s_max: int) -> int:
     # Mark logical completion for active clients.
     state.hold = np.where(active, np.maximum(state.hold, np.round(got).astype(np.int64)),
                           state.hold)
-    return slots
+    eff = float(slots)
+    if sent_hist:
+        peak = max(sent_hist)
+        if peak > 0:
+            eff = slots - 1 + sent_hist[-1] / peak
+    return eff

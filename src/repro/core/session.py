@@ -249,10 +249,25 @@ class SessionRound:
         default_factory=lambda: np.zeros(0, np.int64))
     spray_plan: Optional[SprayPlan] = None
 
+    @property
+    def t_warm_s(self) -> float:
+        """Wall-clock warm-up duration (spray + cycles + control)."""
+        return self.result.metrics.t_warm_s
+
+    @property
+    def t_round_s(self) -> float:
+        return self.result.metrics.t_round_s
+
+    @property
+    def warmup_share_s(self) -> float:
+        return self.result.metrics.warmup_share_s
+
     def global_log(self) -> TransferTrace:
         """The round's transfer trace with sender/receiver/owner re-keyed
         to global peer ids and the session ``round`` column stamped
-        (chunk/descriptor ids stay local to the round's torrent)."""
+        (chunk/descriptor ids stay local to the round's torrent;
+        ``t_start``/``t_end`` stay round-relative — the ``round`` column
+        is the cross-round clock)."""
         tr = self.result.log
         ids = self.active_ids
         return TransferTrace(
@@ -264,7 +279,8 @@ class SessionRound:
             chunk=tr.chunk,
             owner=ids[np.asarray(tr.owner, np.int64)].astype(np.int32),
             b_size=tr.b_size, o_size=tr.o_size, phase=tr.phase,
-            round=np.full(len(tr), self.round_idx, dtype=np.int32))
+            round=np.full(len(tr), self.round_idx, dtype=np.int32),
+            t_start=tr.t_start, t_end=tr.t_end)
 
 
 class SwarmSession:
@@ -297,7 +313,9 @@ class SwarmSession:
                  bt_mode: str = "auto",
                  round_seed: Optional[Callable[[int], int]] = None,
                  evolve_overlay: Optional[bool] = None,
-                 spray_policy: Optional[SprayPolicy] = None):
+                 spray_policy: Optional[SprayPolicy] = None,
+                 time_engine: str = "slot",
+                 net=None):
         if churn is None:
             churn = ChurnModel(leave_prob=float(churn_rate))
         self.cfg = cfg
@@ -305,6 +323,14 @@ class SwarmSession:
         self.link_model = link_model
         self.bt_mode = bt_mode
         self.spray_policy = spray_policy
+        # Time engine (§repro.net): "event" runs every round on the
+        # continuous-time transport — wall-clock metrics (t_warm_s,
+        # t_round_s, warmup_share_s) then persist across churn like
+        # every other per-round metric.
+        if time_engine not in ("slot", "event"):
+            raise ValueError(f"unknown time_engine {time_engine!r}")
+        self.time_engine = time_engine
+        self.net = net
         self.round_seed = (round_seed if round_seed is not None
                            else lambda r: cfg.seed * 1000 + r)
         self.evolve = (churn.enabled if evolve_overlay is None
@@ -325,12 +351,19 @@ class SwarmSession:
         if self.evolve:
             self.adj = random_overlay(cfg.n, cfg.min_degree,
                                       cfg.extra_edge_frac, self.rng)
-            self.up, self.down = link_model.sample_chunks_per_slot(
-                cfg.n, cfg.chunk_bytes, cfg.slot_seconds, self.rng)
+            # Persist RAW rates alongside the quantized budgets: the
+            # same draws feed both time domains (see capacities.py), so
+            # swapping time_engine never perturbs the session streams.
+            self.up_bps, self.down_bps = link_model.sample_rates(
+                cfg.n, self.rng)
+            self.up, self.down = cap.quantize_rates(
+                self.up_bps, self.down_bps, cfg.chunk_bytes,
+                cfg.slot_seconds, warn=(time_engine == "slot"))
             self._exposure = np.zeros((cfg.n, cfg.n), dtype=np.int64)
         else:
             self.adj = None
             self.up = self.down = None
+            self.up_bps = self.down_bps = None
             self._exposure = None
 
     # -- membership (round boundaries) ----------------------------------
@@ -406,8 +439,12 @@ class SwarmSession:
             # Re-roll mode samples overlay + capacities fresh each
             # round anyway; only the membership arrays persist.
             return
-        u, d = self.link_model.sample_chunks_per_slot(
-            n_new, cfg.chunk_bytes, cfg.slot_seconds, self.rng)
+        ub, db = self.link_model.sample_rates(n_new, self.rng)
+        u, d = cap.quantize_rates(ub, db, cfg.chunk_bytes,
+                                  cfg.slot_seconds,
+                                  warn=(self.time_engine == "slot"))
+        self.up_bps = np.concatenate([self.up_bps, ub])
+        self.down_bps = np.concatenate([self.down_bps, db])
         self.up = np.concatenate([self.up, u])
         self.down = np.concatenate([self.down, d])
         adj = np.zeros((self.n_peers, self.n_peers), dtype=bool)
@@ -512,15 +549,19 @@ class SwarmSession:
                 cfg_r, self.link_model, dropouts=dropouts,
                 byzantine=byzantine, bt_mode=self.bt_mode,
                 overlay=sub_adj, up=self.up[ids], down=self.down[ids],
+                up_bps=self.up_bps[ids], down_bps=self.down_bps[ids],
                 rng=np.random.default_rng(cfg_r.seed),
-                spray_plan=plan)
+                spray_plan=plan, time_engine=self.time_engine,
+                net=self.net)
             self._exposure[np.ix_(ids, ids)] += sub_adj
         else:
             # Back-compat path: bit-identical to the historical
             # ``simulate_round(cfg.replace(seed=round_seed(r)))`` loop.
             sim = RoundSimulator(cfg_r, self.link_model,
                                  dropouts=dropouts, byzantine=byzantine,
-                                 bt_mode=self.bt_mode, spray_plan=plan)
+                                 bt_mode=self.bt_mode, spray_plan=plan,
+                                 time_engine=self.time_engine,
+                                 net=self.net)
         res = sim.run(collect_maxflow=collect_maxflow)
 
         dropped = ids[~res.active]
@@ -582,6 +623,23 @@ class SwarmSession:
             ids = rec.active_ids
             exp[np.ix_(ids, ids)] += rec.result.adj
         return exp
+
+    def wall_clock(self) -> dict:
+        """Per-round wall-clock metrics across churn (seconds).
+
+        Keys: ``t_warm_s``, ``t_round_s``, ``warmup_share_s``,
+        ``control_s`` — arrays of length ``len(history)``.  Under the
+        slot engine these are the slot grid in seconds; under the event
+        engine they are realized transport makespans plus tracker
+        control time.
+        """
+        ms = [rec.result.metrics for rec in self.history]
+        return {
+            "t_warm_s": np.array([m.t_warm_s for m in ms]),
+            "t_round_s": np.array([m.t_round_s for m in ms]),
+            "warmup_share_s": np.array([m.warmup_share_s for m in ms]),
+            "control_s": np.array([m.control_s for m in ms]),
+        }
 
     def participation(self) -> np.ndarray:
         """Per-round active fraction relative to the current population."""

@@ -5,6 +5,20 @@ paper reports (T_warm, T_round, utilization, warm-up share) plus the
 transfer log consumed by the attack suite (§IV-C) and the empirical
 privacy-bound checks (§IV-A).
 
+Two interchangeable *time engines* sit behind the same scheduling
+contract (``time_engine=``):
+
+* ``"slot"``  — the historical synchronous world: every stage costs one
+  slot of ``cfg.slot_seconds``, capacities are integer chunks/slot, and
+  the trace carries slot-boundary time stamps.
+* ``"event"`` — the continuous-time transport of :mod:`repro.net`: the
+  SAME policies issue the SAME schedules (same rng stream, same integer
+  budgets), but each directive cycle's transfers become max-min
+  fair-share flows over raw bytes/s links, every trace row gets real
+  ``t_start``/``t_end`` instants, warm-up cycles pay tracker directive
+  RTTs, and the metrics report realized wall-clock seconds
+  (``t_warm_s``/``t_round_s``/``warmup_share_s``).
+
 Fault model (§III-E): ``dropouts`` maps slot -> list of clients that
 disconnect at that slot.  Dropped clients are excluded from all further
 scheduling (tracker behaviour); chunks they uniquely held may leave some
@@ -59,15 +73,32 @@ class RoundSimulator:
         overlay: np.ndarray | None = None,
         up: np.ndarray | None = None,
         down: np.ndarray | None = None,
+        up_bps: np.ndarray | None = None,
+        down_bps: np.ndarray | None = None,
         rng: np.random.Generator | None = None,
         spray_plan=None,
+        time_engine: str = "slot",      # "slot" | "event"
+        net=None,                       # repro.net.NetConfig (event only)
     ):
         """``overlay``/``up``/``down``/``rng`` let a :class:`SwarmSession`
         inject a persistent population (evolving topology, sticky
         capacities) instead of re-rolling everything from ``cfg.seed``.
         When omitted, construction is exactly the historical single-round
         path: seed the rng, sample a fresh overlay, sample capacities —
-        in that order, so existing seeds reproduce bit-identically."""
+        in that order, so existing seeds reproduce bit-identically.
+
+        ``time_engine="event"`` swaps the synchronous slot clock for the
+        continuous-time transport of :mod:`repro.net` (same schedules,
+        wall-clock seconds, fair-share flow timing); ``net`` is its
+        :class:`~repro.net.NetConfig`.  ``up_bps``/``down_bps`` inject
+        raw link rates alongside the integer budgets (sessions persist
+        them); when omitted they are sampled from ``link_model`` via the
+        same rng draws that produce the slot budgets, so both engines
+        see the same physical links at the same seed.
+        """
+        if time_engine not in ("slot", "event"):
+            raise ValueError(f"unknown time_engine {time_engine!r}")
+        self.time_engine = time_engine
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed) if rng is None else rng
         self.adj = (random_overlay(cfg.n, cfg.min_degree,
@@ -77,11 +108,32 @@ class RoundSimulator:
             raise ValueError(f"overlay shape {self.adj.shape} != "
                              f"({cfg.n}, {cfg.n})")
         if up is None or down is None:
-            self.up, self.down = link_model.sample_chunks_per_slot(
-                cfg.n, cfg.chunk_bytes, cfg.slot_seconds, self.rng)
+            # One pair of uniform draws feeds BOTH time domains: raw
+            # bytes/s for the event engine, quantized chunks/slot for
+            # the slot engines (the historical draw order, so existing
+            # seeds reproduce bit-identically).
+            self.up_bps, self.down_bps = link_model.sample_rates(
+                cfg.n, self.rng)
+            self.up, self.down = cap.quantize_rates(
+                self.up_bps, self.down_bps, cfg.chunk_bytes,
+                cfg.slot_seconds, warn=(time_engine == "slot"))
         else:
             self.up = np.asarray(up, dtype=np.int64)
             self.down = np.asarray(down, dtype=np.int64)
+            if up_bps is not None and down_bps is not None:
+                self.up_bps = np.asarray(up_bps, np.float64)
+                self.down_bps = np.asarray(down_bps, np.float64)
+            else:
+                # Budget-faithful fallback: rates that reproduce the
+                # injected integer budgets exactly.
+                self.up_bps = self.up * (cfg.chunk_bytes
+                                         / cfg.slot_seconds)
+                self.down_bps = self.down * (cfg.chunk_bytes
+                                             / cfg.slot_seconds)
+        if net is None and time_engine == "event":
+            from repro.net import NetConfig
+            net = NetConfig()
+        self.net = net
         self.dropouts = dropouts or {}
         if bt_mode == "auto":
             bt_mode = ("exact" if cfg.n * cfg.total_chunks <= exact_limit
@@ -103,11 +155,13 @@ class RoundSimulator:
         self.spray_plan = spray_plan
 
     # ------------------------------------------------------------------
-    def _spray(self):
+    def _spray(self, engine=None):
         """Pre-round obfuscation (§III-B.1): sigma chunks per source to
         random non-neighbors over ephemeral tracker-coordinated tunnels.
         Happens before slot 0 and is not attributed to round pseudonyms
-        (tunnels are torn down; attacks read phase==1 only)."""
+        (tunnels are torn down; attacks read phase==1 only).  Under the
+        event engine the sprays are transported as fair-share flows and
+        the tunnel brokering is charged to the control plane."""
         cfg = self.cfg
         st = self.state
         sigma = cfg.spray_copies
@@ -119,33 +173,38 @@ class RoundSimulator:
             # (source, target, offset) triples, drawn from the session
             # stream — the simulator stream is left untouched.
             src, tgt, off = self.spray_plan.as_local_arrays()
-            st.apply_transfers(src, tgt, src * K + off, phase_code=0,
+            snd, tgts, chk = src, tgt, src * K + off
+        else:
+            # Vectorized over all sources at once: no per-client loop.
+            nn = ~self.adj      # fresh array; safe to edit the diagonal
+            np.fill_diagonal(nn, False)
+            counts = nn.sum(axis=1)
+            rows = np.flatnonzero(counts > 0)
+            if rows.size == 0:
+                return    # complete overlay: no non-neighbors
+            m = min(sigma, K)
+            # m distinct chunk offsets per source: top-m of a random
+            # matrix (unordered-sample-without-replacement).
+            keys = self.rng.random((rows.size, K))
+            ids = (np.argpartition(keys, m - 1, axis=1)[:, :m] if m < K
+                   else np.argsort(keys, axis=1))
+            # One uniform non-neighbor per sprayed chunk (with
+            # replacement): pick the j-th non-neighbor by rank; stable
+            # argsort of ~nn puts non-neighbor columns first ascending.
+            pick = (self.rng.random((rows.size, m))
+                    * counts[rows, None]).astype(np.int64)
+            order = np.argsort(~nn[rows], axis=1, kind="stable")
+            tgts = order[np.arange(rows.size)[:, None], pick]
+            tgts = tgts.ravel().astype(np.int64)
+            snd = np.repeat(rows, m).astype(np.int64)
+            chk = (rows[:, None] * K + ids).ravel()
+        if engine is None:
+            st.apply_transfers(snd, tgts, chk, phase_code=0,
                                consume_slot=False)
-            return
-        # Vectorized over all sources at once: no per-client Python loop.
-        nn = ~self.adj          # fresh array; safe to edit the diagonal
-        np.fill_diagonal(nn, False)
-        counts = nn.sum(axis=1)
-        rows = np.flatnonzero(counts > 0)
-        if rows.size == 0:
-            return    # complete overlay: no non-neighbors to spray to
-        m = min(sigma, K)
-        # m distinct chunk offsets per source: top-m of a random matrix
-        # (the unordered-sample-without-replacement distribution).
-        keys = self.rng.random((rows.size, K))
-        ids = (np.argpartition(keys, m - 1, axis=1)[:, :m] if m < K
-               else np.argsort(keys, axis=1))
-        # One uniform non-neighbor per sprayed chunk (with replacement):
-        # pick the j-th non-neighbor by rank; stable argsort of ~nn puts
-        # the non-neighbor columns first in ascending order.
-        pick = (self.rng.random((rows.size, m))
-                * counts[rows, None]).astype(np.int64)
-        order = np.argsort(~nn[rows], axis=1, kind="stable")
-        tgts = order[np.arange(rows.size)[:, None], pick]
-        snd = np.repeat(rows, m).astype(np.int64)
-        chk = (rows[:, None] * K + ids).ravel()
-        st.apply_transfers(snd, tgts.ravel().astype(np.int64), chk,
-                           phase_code=0, consume_slot=False)
+        else:
+            ts, te = engine.spray(snd, tgts, chk)
+            st.apply_transfers(snd, tgts, chk, phase_code=0,
+                               consume_slot=False, t_start=ts, t_end=te)
 
     # ------------------------------------------------------------------
     def _schedule_filtered(self, scheduler_fn):
@@ -182,8 +241,14 @@ class RoundSimulator:
     def run(self, collect_maxflow: bool = False) -> RoundResult:
         cfg = self.cfg
         st = self.state
+        engine = None
+        if self.time_engine == "event":
+            from repro.net import EventEngine
+            engine = EventEngine(cfg.n, cfg.chunk_bytes, self.up_bps,
+                                 self.down_bps, self.net, cfg.seed)
         if cfg.enable_preround:
-            self._spray()
+            self._spray(engine)
+        t_spray_s = engine.t if engine is not None else 0.0
 
         ubs: list[int] = []
         # ---- warm-up (§III-B) ----
@@ -197,7 +262,12 @@ class RoundSimulator:
                 ubs.append(stage_upper_bound(st))
             snd, rcv, chk = self._schedule_filtered(
                 lambda: pol.schedule(view))
-            st.apply_transfers(snd, rcv, chk, phase_code=1)
+            if engine is None:
+                st.apply_transfers(snd, rcv, chk, phase_code=1)
+            else:
+                ts, te = engine.warmup_cycle(st.slot, snd, rcv, chk)
+                st.apply_transfers(snd, rcv, chk, phase_code=1,
+                                   t_start=ts, t_end=te)
             st.slot += 1
             # Stall guard: lags leave early slots empty, and a receiver
             # whose only missing chunks are unreplicated owner chunks
@@ -212,6 +282,8 @@ class RoundSimulator:
                 break
         t_warm = st.slot
         failed_open = not st.warmup_done()
+        t_warm_s = (engine.t if engine is not None
+                    else t_warm * cfg.slot_seconds)
 
         warm_sent_arr = np.asarray(st.per_slot_sent, dtype=np.int64)
 
@@ -219,14 +291,23 @@ class RoundSimulator:
         st.phase = "bt"
         fluid = self.bt_mode == "fluid"
         if fluid:
-            run_bt_fluid(st, cfg.s_max - st.slot)
+            eff_slots = run_bt_fluid(st, cfg.s_max - st.slot)
+            if engine is not None:
+                # Fluid BT is count-space; its realized duration is the
+                # (fractional) capacity-bound slot count in seconds.
+                engine.advance(eff_slots * cfg.slot_seconds)
         else:
             idle = 0
             while not st.all_done() and st.slot < cfg.s_max:
                 self._apply_dropouts()
                 snd, rcv, chk = self._schedule_filtered(
                     lambda: bt_exact_slot(st))
-                st.apply_transfers(snd, rcv, chk, phase_code=2)
+                if engine is None:
+                    st.apply_transfers(snd, rcv, chk, phase_code=2)
+                else:
+                    ts, te = engine.bt_cycle(snd, rcv, chk)
+                    st.apply_transfers(snd, rcv, chk, phase_code=2,
+                                       t_start=ts, t_end=te)
                 st.slot += 1
                 idle = idle + 1 if len(snd) == 0 else 0
                 if idle >= 3:
@@ -235,12 +316,21 @@ class RoundSimulator:
                     # remaining reconstructable set (§III-E).
                     break
         t_round = st.slot
+        t_round_s = (engine.t if engine is not None
+                     else t_round * cfg.slot_seconds)
 
         # ---- metrics ----
         total_up = float(self.up.sum())
         m = RoundMetrics(
             t_warm=t_warm,
             t_round=t_round,
+            t_warm_s=float(t_warm_s),
+            t_round_s=float(t_round_s),
+            t_spray_s=float(t_spray_s),
+            control_s=(float(engine.tracker.control_s)
+                       if engine is not None else 0.0),
+            warmup_share_s=(float(t_warm_s / t_round_s)
+                            if t_round_s else 0.0),
             warmup_chunks_sent=st.warmup_sent,
             bt_chunks_sent=st.bt_sent,
             warmup_utilization=(st.warmup_sent / (t_warm * total_up))
@@ -263,7 +353,7 @@ class RoundSimulator:
             recon = st.reconstructable_sets()
             recon &= st.active[:, None]
 
-        log = st.log.finalize(cfg.chunks_per_update)
+        log = st.log.finalize(cfg.chunks_per_update, cfg.slot_seconds)
         return RoundResult(
             metrics=m, log=log, reconstructable=recon,
             active=st.active.copy(), adj=self.adj, up=self.up,
@@ -271,6 +361,10 @@ class RoundSimulator:
             maxflow_ub=np.asarray(ubs, dtype=np.int64) if collect_maxflow else None,
             warmup_sent_per_slot=warm_sent_arr,
             fluid_bt=fluid,
+            tracker_log=(dict(engine.tracker.as_log(),
+                              data_s=engine.data_s,
+                              n_solves=engine.n_solves)
+                         if engine is not None else None),
         )
 
 

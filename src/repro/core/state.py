@@ -36,8 +36,11 @@ class TransferLog:
     b_sizes: list = field(default_factory=list)   # B_u at send time
     o_sizes: list = field(default_factory=list)   # O_u at send time
     phases: list = field(default_factory=list)    # 0=spray 1=warmup 2=bt
+    t_starts: list = field(default_factory=list)  # wall-clock (event eng.)
+    t_ends: list = field(default_factory=list)
 
-    def append(self, slot, snd, rcv, chk, b, o, phase):
+    def append(self, slot, snd, rcv, chk, b, o, phase,
+               t_start=None, t_end=None):
         if len(snd) == 0:
             return
         self.slots.append(np.full(len(snd), slot, dtype=np.int32))
@@ -47,14 +50,33 @@ class TransferLog:
         self.b_sizes.append(np.asarray(b, dtype=np.int64))
         self.o_sizes.append(np.asarray(o, dtype=np.int64))
         self.phases.append(np.full(len(snd), phase, dtype=np.int8))
+        if t_start is not None:
+            self.t_starts.append(np.asarray(t_start, dtype=np.float64))
+            self.t_ends.append(np.asarray(t_end, dtype=np.float64))
 
-    def finalize(self, chunks_per_update: int) -> TransferTrace:
-        """Concatenate the per-slot pieces into one typed trace."""
+    def finalize(self, chunks_per_update: int,
+                 slot_seconds: float = 1.0) -> TransferTrace:
+        """Concatenate the per-slot pieces into one typed trace.
+
+        Wall-clock columns: when the event engine stamped every batch,
+        its real-valued instants are used; otherwise (slot engines) the
+        trace carries slot-boundary stamps in seconds.  Mixing is a
+        caller error — one round runs on exactly one time engine.
+        """
         if not self.slots:
             return TransferTrace(K=chunks_per_update)
         chunk = np.concatenate(self.chunks)
+        times = {}
+        if self.t_starts:
+            if len(self.t_starts) != len(self.slots):
+                raise ValueError(
+                    "wall-clock stamps cover only part of the log: "
+                    f"{len(self.t_starts)} of {len(self.slots)} batches")
+            times = {"t_start": np.concatenate(self.t_starts),
+                     "t_end": np.concatenate(self.t_ends)}
         return TransferTrace.from_arrays(
             K=chunks_per_update,
+            slot_seconds=slot_seconds,
             slot=np.concatenate(self.slots),
             sender=np.concatenate(self.senders),
             receiver=np.concatenate(self.receivers),
@@ -63,6 +85,7 @@ class TransferLog:
             b_size=np.concatenate(self.b_sizes),
             o_size=np.concatenate(self.o_sizes),
             phase=np.concatenate(self.phases),
+            **times,
         )
 
 
@@ -252,12 +275,18 @@ class SwarmState:
     # -- transfer application -------------------------------------------
     def apply_transfers(self, snd: np.ndarray, rcv: np.ndarray,
                         chk: np.ndarray, phase_code: int,
-                        consume_slot: bool = True):
+                        consume_slot: bool = True,
+                        t_start: np.ndarray | None = None,
+                        t_end: np.ndarray | None = None):
         """Mark chunks delivered; update rarity, X_u and the event log.
 
         ``consume_slot=False`` applies the transfers without charging a
         round slot to ``per_slot_sent`` — used by the pre-round spray,
         which happens over ephemeral tunnels before slot 0.
+
+        ``t_start``/``t_end`` (aligned with the input arrays) are the
+        event engine's wall-clock stamps; they ride through the
+        de-dup/reorder below so every *delivered* row keeps its instant.
         """
         if len(snd) == 0:
             if consume_slot:
@@ -275,6 +304,9 @@ class SwarmState:
         already = self.have[rcv, chk]
         keep &= ~already
         snd, rcv, chk = snd[keep], rcv[keep], chk[keep]
+        if t_start is not None:
+            t_start = np.asarray(t_start, np.float64)[order][keep]
+            t_end = np.asarray(t_end, np.float64)[order][keep]
 
         # (B_u, O_u) at send time, vectorized (see buffer_stats):
         # ungated phases expose the whole inventory; gated warm-up
@@ -298,7 +330,8 @@ class SwarmState:
             self.any_nonowner = True
         self._win_cache = None    # gating state changed mid-slot
 
-        self.log.append(self.slot, snd, rcv, chk, b, o, phase_code)
+        self.log.append(self.slot, snd, rcv, chk, b, o, phase_code,
+                        t_start=t_start, t_end=t_end)
         cnt = len(snd)
         if consume_slot:
             self.per_slot_sent.append(cnt)

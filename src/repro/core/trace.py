@@ -20,6 +20,16 @@ Columns (equal-length numpy arrays)
 ``o_size``     int64   eligible owner count O_u at send time (Eq. 1)
 ``phase``      int8    0 = spray, 1 = warm-up, 2 = BT
 ``round``      int32   session round index (0 for single-round traces)
+``t_start``    float64 wall-clock start of the transfer (seconds)
+``t_end``      float64 wall-clock completion instant (seconds)
+
+The two time columns are the continuous-time observation surface the
+event engine (:mod:`repro.net`) opens: per-transfer start/finish
+instants over max-min fair-share flows, i.e. the network-layer timing
+side-channel (``attacks.timing_attribution``).  The slot engine stamps
+slot boundaries (``t_start = slot * Δ``, ``t_end = (slot+1) * Δ``), so
+ordering by ``t_start`` is always consistent with slot order and every
+existing consumer keeps working unchanged.
 
 Views are cheap: slicing helpers (:meth:`rounds_slice`,
 :meth:`phase_slice`, :meth:`observed_by`) return new traces over
@@ -55,10 +65,11 @@ import numpy as np
 PHASE_CODES = {"spray": 0, "warmup": 1, "bt": 2}
 
 _KEYS = ("slot", "sender", "receiver", "chunk", "owner",
-         "b_size", "o_size", "phase", "round")
+         "b_size", "o_size", "phase", "round", "t_start", "t_end")
 _DTYPES = {"slot": np.int32, "sender": np.int32, "receiver": np.int32,
            "chunk": np.int64, "owner": np.int32, "b_size": np.int64,
-           "o_size": np.int64, "phase": np.int8, "round": np.int32}
+           "o_size": np.int64, "phase": np.int8, "round": np.int32,
+           "t_start": np.float64, "t_end": np.float64}
 
 
 def _empty_cols(n: int = 0) -> dict:
@@ -79,18 +90,28 @@ class TransferTrace:
     o_size: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int64))
     phase: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int8))
     round: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
+    t_start: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.float64))
+    t_end: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.float64))
     K: int = 0          # chunks per update — the descriptor partition
 
     # -- construction --------------------------------------------------
     @classmethod
     def from_arrays(cls, *, K: int = 0, round_idx: int = 0,
-                    **cols) -> "TransferTrace":
+                    slot_seconds: float = 1.0, **cols) -> "TransferTrace":
         n = len(cols["slot"]) if "slot" in cols else 0
         out = _empty_cols(n)
         for k, v in cols.items():
             out[k] = np.asarray(v)
         if "round" not in cols:
             out["round"] = np.full(n, round_idx, dtype=np.int32)
+        if "t_start" not in cols:
+            # Slot-boundary stamps: the slot engine's (and any legacy
+            # log's) time columns are the slot grid in seconds.
+            s = out["slot"].astype(np.float64) * slot_seconds
+            out["t_start"] = s
+            out["t_end"] = s + slot_seconds
         return cls(K=K, **out)
 
     @classmethod

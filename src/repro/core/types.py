@@ -119,6 +119,15 @@ class RoundMetrics:
 
     t_warm: int = 0            # warm-up duration (slots)
     t_round: int = 0           # total round duration (slots)
+    # Wall-clock round times (seconds).  The slot engine stamps the
+    # slot grid (t = slots * Δ); the event engine (repro.net) reports
+    # realized transport makespans + tracker control time, which is
+    # what the paper's §V-E seconds claims are about.
+    t_warm_s: float = 0.0      # spray + warm-up cycles + control time
+    t_round_s: float = 0.0     # total realized round duration
+    t_spray_s: float = 0.0     # pre-round obfuscation transport
+    control_s: float = 0.0     # tracker control plane (directive RTTs)
+    warmup_share_s: float = 0.0   # t_warm_s / t_round_s
     warmup_chunks_sent: int = 0
     bt_chunks_sent: int = 0
     warmup_utilization: float = 0.0   # Util(pi; H) during warm-up

@@ -13,9 +13,18 @@ continues — asserting loss continuity across the re-mesh.  Params and
 optimizer state carry over: a drop shrinks the swarm, never resets
 training.
 
+``--join-pod N`` is the symmetric growth drill (§III-E elastic P): at
+``--join-at`` (default steps/2) N fresh pods join, the run checkpoints,
+re-meshes from P to P+N over the enlarged device set
+(``make_pod_mesh`` with the larger pod count), re-places the carried
+params/optimizer state, and continues — loss continuity asserted the
+same way.  A join widens the collective, never resets training.
+
     PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
         --reduced --steps 200 --batch 8 --seq 64 --ckpt /tmp/ckpt
     PYTHONPATH=src python -m repro.launch.train --pods 4 --drop-pod 2 \
+        --reduced --steps 40 --batch 8 --seq 32
+    PYTHONPATH=src python -m repro.launch.train --pods 3 --join-pod 1 \
         --reduced --steps 40 --batch 8 --seq 32
 """
 from __future__ import annotations
@@ -61,17 +70,25 @@ def main(argv=None):
                          "P->P-1, continue (loss continuity asserted)")
     ap.add_argument("--drop-at", type=int, default=-1,
                     help="step of the pod failure (default steps/2)")
+    ap.add_argument("--join-pod", type=int, default=0,
+                    help="mid-run pod growth: N pods join, checkpoint, "
+                         "re-mesh P->P+N over the enlarged device set, "
+                         "continue (loss continuity asserted)")
+    ap.add_argument("--join-at", type=int, default=-1,
+                    help="step of the pod join (default steps/2)")
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
 
-    # Multi-pod runs need one XLA device per pod; on a plain CPU host
-    # fake them BEFORE the backend initializes (no-op if the operator
-    # already set a device count or real accelerators exist).
-    if args.pods > 1 and ("xla_force_host_platform_device_count"
+    # Multi-pod runs need one XLA device per pod — including the pods
+    # that will only exist after a --join-pod re-mesh; on a plain CPU
+    # host fake them BEFORE the backend initializes (no-op if the
+    # operator already set a device count or real accelerators exist).
+    peak_pods = args.pods + max(args.join_pod, 0)
+    if peak_pods > 1 and ("xla_force_host_platform_device_count"
                           not in os.environ.get("XLA_FLAGS", "")):
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
-            + f" --xla_force_host_platform_device_count={args.pods}")
+            + f" --xla_force_host_platform_device_count={peak_pods}")
 
     import jax
     import jax.numpy as jnp
@@ -88,14 +105,16 @@ def main(argv=None):
     cfg = get_config(args.arch, reduced=args.reduced)
     n_dev = jax.device_count()
     n_pods = args.pods if args.pods > 1 else 1
-    if n_pods > n_dev:
-        raise SystemExit(f"--pods {n_pods} needs >= {n_pods} XLA devices "
-                         f"(have {n_dev}); set XLA_FLAGS="
+    peak = n_pods + max(args.join_pod, 0)
+    if peak > n_dev:
+        raise SystemExit(f"--pods {args.pods} --join-pod "
+                         f"{max(args.join_pod, 0)} needs >= {peak} XLA "
+                         f"devices (have {n_dev}); set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N")
-    dpp = max(n_dev // n_pods, 1)      # data-parallel devices per pod
+    dpp = max(n_dev // peak, 1)        # data-parallel devices per pod
 
     def mesh_factory(p: int):
-        if n_pods == 1:
+        if p == 1:
             return make_host_mesh((n_dev, 1), ("data", "model"))
         return make_pod_mesh(p, data=dpp)
 
@@ -125,8 +144,9 @@ def main(argv=None):
     frames = cfg.d_model if not cfg.has_embedding else 0
 
     drop_at = args.drop_at if args.drop_at >= 0 else args.steps // 2
-    pre_drop_loss = None
-    remeshed = False
+    join_at = args.join_at if args.join_at >= 0 else args.steps // 2
+    prev_loss = None
+    check_continuity = False
     t0 = time.time()
     for it in range(start, args.steps):
         if (args.drop_pod >= 0 and it == drop_at and active_pods > 1):
@@ -139,27 +159,47 @@ def main(argv=None):
                 (params, opt), _ = load_checkpoint(args.ckpt, it - 1,
                                                    (params, opt))
             active_pods -= 1
-            remeshed = True
+            check_continuity = True
             print(f"step {it:5d}  pod {args.drop_pod % n_pods} dropped: "
                   f"re-meshing {active_pods + 1} -> {active_pods} pods",
                   flush=True)
+        if (args.join_pod > 0 and it == join_at
+                and active_pods + args.join_pod <= peak):
+            # §III-E growth drill, the drop's symmetric twin: durable
+            # state at the boundary, widen the collective, rebuild
+            # mesh + ring over the enlarged device set, continue.
+            if args.ckpt:
+                save_checkpoint(args.ckpt, it - 1, (params, opt),
+                                meta={"arch": args.arch,
+                                      "pods": active_pods + args.join_pod})
+                (params, opt), _ = load_checkpoint(args.ckpt, it - 1,
+                                                   (params, opt))
+            active_pods += args.join_pod
+            check_continuity = True
+            print(f"step {it:5d}  {args.join_pod} pod(s) joined: "
+                  f"re-meshing {active_pods - args.join_pod} -> "
+                  f"{active_pods} pods", flush=True)
         batch = synthetic_batch(rng, active_pods, b_local, args.seq,
                                 cfg.vocab, frames=frames)
         params, opt, m = step_fn(params, opt, batch,
                                  jnp.ones((active_pods,)),
                                  jnp.ones((active_pods,)))
         loss = float(m["loss"])
-        if it == drop_at - 1:
-            pre_drop_loss = loss
-        if pre_drop_loss is not None and it == drop_at and remeshed:
-            # Continuity across the re-mesh: same params, smaller
+        if check_continuity:
+            # Continuity across the re-mesh: same params, resized
             # collective — anything beyond noise means recovery broke.
-            if not math.isfinite(loss) or loss > 3.0 * pre_drop_loss + 0.5:
-                raise RuntimeError(
-                    f"loss continuity broken across re-mesh: "
-                    f"{pre_drop_loss:.4f} -> {loss:.4f}")
-            print(f"step {it:5d}  re-mesh continuity ok "
-                  f"({pre_drop_loss:.4f} -> {loss:.4f})", flush=True)
+            # A re-mesh on the first executed step has no pre-re-mesh
+            # loss to compare against; skip cleanly (disarm) rather
+            # than grading two post-re-mesh losses next step.
+            if prev_loss is not None:
+                if not math.isfinite(loss) or loss > 3.0 * prev_loss + 0.5:
+                    raise RuntimeError(
+                        f"loss continuity broken across re-mesh: "
+                        f"{prev_loss:.4f} -> {loss:.4f}")
+                print(f"step {it:5d}  re-mesh continuity ok "
+                      f"({prev_loss:.4f} -> {loss:.4f})", flush=True)
+            check_continuity = False
+        prev_loss = loss
         if it % args.log_every == 0 or it == args.steps - 1:
             print(f"step {it:5d}  loss {loss:.4f}  "
                   f"lr {float(m['lr']):.2e}  pods {active_pods}  "

@@ -1,0 +1,210 @@
+"""Continuous-time event-driven transport engine (repro.net).
+
+``EventEngine`` is the second *time engine* behind
+:class:`~repro.core.simulator.RoundSimulator` (``time_engine="event"``).
+The scheduling contract is untouched — the same
+:class:`~repro.core.policy.SchedulerPolicy` decides, per directive
+cycle, exactly the transfers the slot engine would schedule (same rng
+stream, same integer budgets) — but each cycle's transfers are then
+*transported*: grouped into per-(sender, receiver) flows, rated by
+max-min fair share over the raw bytes/s access links
+(:mod:`repro.net.fairshare`), pipelined chunk-by-chunk, and stamped
+with real-valued ``t_start``/``t_end`` instants.  The wall clock
+advances by each cycle's realized makespan plus the tracker directive
+RTT (:mod:`repro.net.tracker`), so round times come out in honest
+seconds:
+
+* a cycle that trickles (lags, closed gates) finishes early instead of
+  costing a full slot;
+* a cycle whose grants oversubscribe a receiver's downlink takes longer
+  than a slot — queueing the slot world cannot express;
+* warm-up pays coordination RTT per cycle, BT swarming does not.
+
+In the homogeneous-capacity, zero-latency, zero-RTT limit the engine
+reproduces the slot engine's per-cycle chunk transfer counts exactly
+(it *is* the same schedule) and ``t_start`` ordering is consistent
+with slot order (cycles are sequential barriers) — the cross-validation
+anchor in ``tests/test_net.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .fairshare import pipeline_starts, transport
+from .tracker import TrackerControlPlane
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """Physical-layer knobs of the event engine.
+
+    ``tracker_rtt_s``    warm-up directive network round-trip per cycle
+                         (control plane, off the data path).
+    ``tracker_solve_s``  per-cycle centralized assignment solve time:
+                         the tracker collects availability and computes
+                         the stage schedule before fanning directives
+                         out — milliseconds at K~200 pieces, but a real
+                         cost at LLM piece counts (10^4-10^5 pieces x
+                         dozens of peers per cycle, §V-E).
+    ``latency_lo_s``/``latency_hi_s``
+                         per-peer one-way access propagation delay,
+                         sampled uniformly once per round; a transfer
+                         over (u, v) is delayed by ``lat[u] + lat[v]``.
+    ``spray_setup_s``    one-off tunnel brokering before the spray.
+    ``quantum_frac``     fair-share re-solve batching (see
+                         :func:`repro.net.fairshare.transport`).
+    """
+
+    tracker_rtt_s: float = 0.1
+    tracker_solve_s: float = 0.0
+    latency_lo_s: float = 0.0
+    latency_hi_s: float = 0.0
+    spray_setup_s: float = 0.0
+    quantum_frac: float = 1 / 32
+
+    def replace(self, **kw) -> "NetConfig":
+        import dataclasses
+        return dataclasses.replace(self, **kw)
+
+
+# Paper-flavored presets.  Residential swarms (K ~ 200 pieces): tens of
+# ms of access propagation, negligible assignment solves.  Datacenter
+# LLM-scale swarms (§V-E): no propagation worth modeling, but each
+# directive cycle's centralized assignment over 10^4-10^5 pieces costs
+# real solve time — the dominant control-plane term behind the paper's
+# ~6-10% FLTorrent-over-BT round-time overhead.
+RESIDENTIAL_NET = NetConfig(tracker_rtt_s=0.1, latency_lo_s=0.005,
+                            latency_hi_s=0.030)
+DATACENTER_NET = NetConfig(tracker_rtt_s=0.1, tracker_solve_s=0.6)
+
+
+class EventEngine:
+    """Wall-clock transport of one round's scheduled transfer cycles.
+
+    The engine owns its own rng stream (derived from ``seed`` with a
+    fixed salt) so sampling propagation latencies never perturbs the
+    simulator's scheduling stream — schedules stay bit-identical to the
+    slot engine's at the same seed.
+    """
+
+    def __init__(self, n: int, chunk_bytes: int,
+                 up_bps: np.ndarray, down_bps: np.ndarray,
+                 net: NetConfig, seed: int):
+        self.n = int(n)
+        self.chunk_bytes = float(chunk_bytes)
+        self.up_bps = np.asarray(up_bps, np.float64)
+        self.down_bps = np.asarray(down_bps, np.float64)
+        # A zero-rate link can never deliver, but the scheduling layer
+        # would still mark its chunks delivered — so a scheduled flow
+        # over one would stamp t_end = inf into the trace.  Reject it
+        # up front (the slot world's >=1 chunk/slot clamp means only
+        # direct rate injection can produce this).
+        if (self.up_bps <= 0).any() or (self.down_bps <= 0).any():
+            raise ValueError(
+                "event engine needs strictly positive link rates; got "
+                f"{int((self.up_bps <= 0).sum())} non-positive uplinks "
+                f"and {int((self.down_bps <= 0).sum())} downlinks")
+        self.net = net
+        rng = np.random.default_rng(
+            np.random.SeedSequence([int(seed) & 0x7FFFFFFF, 0x7E71]))
+        if net.latency_hi_s > 0:
+            self.lat = rng.uniform(net.latency_lo_s, net.latency_hi_s,
+                                   size=self.n)
+        else:
+            self.lat = np.zeros(self.n, np.float64)
+        self.t = 0.0                      # wall clock (seconds)
+        self.tracker = TrackerControlPlane(
+            rtt_s=net.tracker_rtt_s, solve_s=net.tracker_solve_s,
+            spray_setup_s=net.spray_setup_s)
+        self.n_solves = 0
+        self.data_s = 0.0                 # time with data in flight
+
+    # ------------------------------------------------------------------
+    def _transport(self, snd, rcv, t0: float):
+        """Fair-share transport of one cycle's transfers from ``t0``.
+
+        Returns aligned (t_start, t_end) arrays and the barrier instant
+        (last delivery).  Transfers between the same pair are pipelined
+        in emission order — the policy emits rarest-first, so the wire
+        order *is* the priority order.
+        """
+        snd = np.asarray(snd, np.int64)
+        rcv = np.asarray(rcv, np.int64)
+        pair = snd * self.n + rcv
+        upair, inv = np.unique(pair, return_inverse=True)
+        counts = np.bincount(inv)
+        fs, fd = upair // self.n, upair % self.n
+        tm = transport(fs, fd, counts, self.chunk_bytes,
+                       self.up_bps, self.down_bps,
+                       quantum_frac=self.net.quantum_frac)
+        self.n_solves += tm.n_solves
+        # Guard against fp under-emission: pad each flow's tail chunks
+        # with its finish instant so every transfer gets a stamp.
+        emitted = np.bincount(tm.chunk_flow, minlength=len(upair))
+        if (emitted < counts).any():
+            miss = counts - emitted
+            padf = np.repeat(np.flatnonzero(miss > 0),
+                             miss[miss > 0])
+            cflow = np.concatenate([tm.chunk_flow, padf])
+            cend = np.concatenate([tm.chunk_end, tm.finish[padf]])
+            o = np.lexsort((cend, cflow))
+            cflow, cend = cflow[o], cend[o]
+        else:
+            cflow, cend = tm.chunk_flow, tm.chunk_end
+        cstart = pipeline_starts(cflow, cend)
+        # Per-transfer pipeline rank within its pair, in emission order.
+        order = np.argsort(inv, kind="stable")
+        inv_s = inv[order]
+        first = np.searchsorted(inv_s, inv_s)
+        rank = np.arange(len(inv_s)) - first
+        off = np.cumsum(counts) - counts
+        pos = off[inv_s] + rank
+        lat_pair = self.lat[fs] + self.lat[fd]
+        te = np.empty(len(snd), np.float64)
+        ts = np.empty(len(snd), np.float64)
+        te[order] = t0 + lat_pair[inv_s] + cend[pos]
+        ts[order] = t0 + lat_pair[inv_s] + cstart[pos]
+        fin = tm.finish.copy()
+        fin[~np.isfinite(fin)] = 0.0
+        barrier = t0 + float(np.max(fin + lat_pair, initial=0.0))
+        return ts, te, barrier
+
+    # ------------------------------------------------------------------
+    def spray(self, snd, rcv, chk):
+        """Pre-round obfuscation over ephemeral tunnels: tunnel setup
+        (control plane) then one fair-share transport of all sprays."""
+        t0 = self.tracker.spray_setup(self.t, len(snd))
+        if len(snd) == 0:
+            self.t = t0
+            return (np.zeros(0, np.float64), np.zeros(0, np.float64))
+        ts, te, barrier = self._transport(snd, rcv, t0)
+        self.data_s += barrier - t0
+        self.t = barrier
+        return ts, te
+
+    def warmup_cycle(self, slot: int, snd, rcv, chk):
+        """One warm-up directive cycle: tracker RTT, then transport."""
+        t0 = self.tracker.directive_cycle(slot, self.t, len(snd))
+        if len(snd) == 0:
+            self.t = t0                 # an idle cycle still ticks
+            return (np.zeros(0, np.float64), np.zeros(0, np.float64))
+        ts, te, barrier = self._transport(snd, rcv, t0)
+        self.data_s += barrier - t0
+        self.t = barrier
+        return ts, te
+
+    def bt_cycle(self, snd, rcv, chk):
+        """One exact-BT swarming cycle: peer-driven, no tracker RTT."""
+        if len(snd) == 0:
+            return (np.zeros(0, np.float64), np.zeros(0, np.float64))
+        ts, te, barrier = self._transport(snd, rcv, self.t)
+        self.data_s += barrier - self.t
+        self.t = barrier
+        return ts, te
+
+    def advance(self, seconds: float):
+        """Advance the wall clock (fluid BT phases report durations in
+        count space; the engine just books the time)."""
+        self.t += float(seconds)

@@ -253,3 +253,24 @@ def test_train_drop_pod_recovery_within_10pct():
     base_loss, _ = run([])
     assert abs(drop_loss - base_loss) <= 0.10 * base_loss, \
         (drop_loss, base_loss)
+
+
+@pytest.mark.dist
+def test_train_join_pod_growth_continuity():
+    """The symmetric growth drill: a 3-pod run gains a pod mid-training,
+    re-meshes 3 -> 4 over the enlarged device set, asserts loss
+    continuity across the re-mesh, and finishes with a finite loss."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    cmd = [sys.executable, "-m", "repro.launch.train",
+           "--arch", "qwen3-1.7b", "--reduced", "--pods", "3",
+           "--join-pod", "1", "--steps", "12", "--batch", "8",
+           "--seq", "32", "--log-every", "4"]
+    res = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert res.returncode == 0, res.stderr[-4000:]
+    assert "re-meshing 3 -> 4 pods" in res.stdout
+    assert "re-mesh continuity ok" in res.stdout
+    m = re.search(r"final loss ([0-9.]+)", res.stdout)
+    assert m, res.stdout[-2000:]
+    assert np.isfinite(float(m.group(1)))
