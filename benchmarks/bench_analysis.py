@@ -1,0 +1,95 @@
+"""swarmlint benchmark + smoke gate: the shipped tree must be clean.
+
+Two measurements, one contract:
+
+* **smoke** — ``python -m repro.analysis src`` (and ``examples``) must
+  exit 0 under the justified baseline: zero non-baselined findings in
+  the shipped tree.  This is the benchmarks-side twin of the CI
+  ``analysis`` job (ISSUE 6 satellite).
+* **speed** — wall-clock of a full analyzer pass over ``src`` +
+  ``examples`` (the CI job budget is < 60 s; this records the actual
+  cost) and the per-family finding counts, including the jit-readiness
+  scorecard totals that feed the jitted-engine PR's worklist.
+
+    python benchmarks/bench_analysis.py [--quick]
+
+Emits ``results/bench/BENCH_analysis.json``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from common import banner, save  # noqa: E402
+from repro.analysis import (AnalysisContext, Baseline,  # noqa: E402
+                            collect_findings, scorecard)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run(fast: bool = True):
+    banner("swarmlint: static invariant analysis of the shipped tree")
+
+    # -- smoke: the CI contract, exercised exactly as CI runs it ------
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    t0 = time.time()
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src", "examples"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=300)
+    cli_s = time.time() - t0
+    clean = proc.returncode == 0
+    print(f"  python -m repro.analysis src examples -> "
+          f"exit {proc.returncode} in {cli_s:.2f}s "
+          f"({'clean' if clean else 'NEW FINDINGS'})")
+    if not clean:
+        print(proc.stdout)
+
+    # -- speed + finding anatomy (in-process, no subprocess cost) -----
+    t0 = time.time()
+    ctx = AnalysisContext(REPO)
+    ctx.add_paths([os.path.join(REPO, "src"),
+                   os.path.join(REPO, "examples")])
+    findings = collect_findings(ctx)
+    analyze_s = time.time() - t0
+    by_family: dict = {}
+    for f in findings:
+        fam = ("visibility" if f.rule.startswith("VIS")
+               else "jit" if f.rule.startswith("JIT") else "rng")
+        by_family[fam] = by_family.get(fam, 0) + 1
+    rows = scorecard(ctx, findings)
+    ready = sum(1 for *_x, ok in rows if ok)
+    bl = Baseline.load(os.path.join(REPO, "analysis_baseline.json"))
+    print(f"  {len(ctx.modules)} files in {analyze_s:.2f}s; findings "
+          f"by family: {by_family or '{}'}; baseline entries: "
+          f"{len(bl.entries)}")
+    print(f"  jit scorecard: {ready}/{len(rows)} slated functions "
+          f"kernel-ready")
+
+    payload = {
+        "smoke_exit_code": proc.returncode,
+        "smoke_clean": clean,
+        "cli_wall_s": round(cli_s, 3),
+        "analyze_wall_s": round(analyze_s, 3),
+        "files_analyzed": len(ctx.modules),
+        "findings_by_family": by_family,
+        "baseline_entries": len(bl.entries),
+        "stale_baseline_keys": bl.unused(findings),
+        "jit_targets_total": len(rows),
+        "jit_targets_ready": ready,
+        "under_ci_budget_60s": cli_s < 60.0,
+    }
+    save("BENCH_analysis", payload)
+    if not clean:
+        raise AssertionError(
+            "shipped tree has non-baselined findings (see above)")
+    return payload
+
+
+if __name__ == "__main__":
+    run(fast="--quick" in sys.argv[1:])

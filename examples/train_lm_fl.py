@@ -7,7 +7,6 @@ same FedAvg-over-reconstructable-set semantics, compiled end to end.
 
     PYTHONPATH=src python examples/train_lm_fl.py
 """
-import sys
 
 from repro.launch.train import main as train_main
 

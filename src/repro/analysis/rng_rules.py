@@ -1,0 +1,341 @@
+"""Determinism / rng-discipline rules (family ``rng``).
+
+The simulation's headline invariant is ONE threaded
+``np.random.Generator`` stream: every draw that can influence a
+schedule or a trace flows through an rng parameter seeded exactly once
+at an entry point (``SwarmConfig.seed``), with derived streams split
+off via salted ``SeedSequence``s.  These rules flag the ways that
+contract silently breaks: process-global generators, fresh or
+constant-seeded generators inside library code, unordered-set
+iteration feeding loop order, identity-based sorts, and wall-clock
+reads inside the simulation layers.
+"""
+from __future__ import annotations
+
+import ast
+
+from .findings import Finding
+from .registry import AnalyzerRule, register_rule
+from .resolve import (call_name, import_aliases, is_constant_expr,
+                      unparse_trim)
+
+# Legacy process-global numpy RNG surface (np.random.<fn> module calls).
+_NP_LEGACY = {
+    "rand", "randn", "random", "random_sample", "ranf", "sample",
+    "choice", "seed", "shuffle", "permutation", "permuted", "randint",
+    "random_integers", "uniform", "normal", "standard_normal",
+    "binomial", "poisson", "beta", "gamma", "exponential", "bytes",
+    "get_state", "set_state",
+}
+
+# Generator constructors whose seeding discipline RNG003/RNG004 police.
+_GEN_CTORS = {
+    "numpy.random.default_rng", "numpy.random.SeedSequence",
+    "jax.random.PRNGKey", "jax.random.key",
+}
+
+# Parameter names that mark a function as rng-threaded.
+_RNG_PARAMS = {"rng", "key", "prng", "prng_key", "rngs", "generator"}
+
+_WALLCLOCK = {
+    "time.time", "time.time_ns", "time.perf_counter",
+    "time.perf_counter_ns", "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+
+def _calls(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node
+
+
+def _param_names(fn) -> set:
+    a = fn.args
+    names = [p.arg for p in
+             (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+@register_rule
+class StdlibRandomRule(AnalyzerRule):
+    """RNG001: any stdlib ``random.*`` call in library code."""
+
+    rule = "RNG001"
+    family = "rng"
+    severity = "error"
+    title = "stdlib random.* call (process-global, unseeded stream)"
+
+    def check(self, ctx):
+        out = []
+        for path, tree in ctx.modules.items():
+            if not ctx.is_library(path):
+                continue
+            aliases = import_aliases(tree)
+            scopes = ctx.scopes(path)
+            for call in _calls(tree):
+                name = call_name(call, aliases)
+                if name.startswith("random.") and name.count(".") == 1:
+                    out.append(Finding(
+                        rule=self.rule, severity=self.severity,
+                        path=path, line=call.lineno,
+                        scope=scopes.get(call.lineno, "<module>"),
+                        detail=name,
+                        message=f"stdlib {name}() draws from the "
+                                f"process-global Mersenne stream",
+                        hint="thread the shared np.random.Generator "
+                             "(view.rng / a cfg-seeded stream) instead"))
+        return out
+
+
+@register_rule
+class NumpyGlobalRngRule(AnalyzerRule):
+    """RNG002: legacy ``np.random.<fn>`` module-global calls."""
+
+    rule = "RNG002"
+    family = "rng"
+    severity = "error"
+    title = "legacy numpy global-RNG call"
+
+    def check(self, ctx):
+        out = []
+        for path, tree in ctx.modules.items():
+            if not ctx.is_library(path):
+                continue
+            aliases = import_aliases(tree)
+            scopes = ctx.scopes(path)
+            for call in _calls(tree):
+                name = call_name(call, aliases)
+                if (name.startswith("numpy.random.")
+                        and name.rsplit(".", 1)[1] in _NP_LEGACY):
+                    out.append(Finding(
+                        rule=self.rule, severity=self.severity,
+                        path=path, line=call.lineno,
+                        scope=scopes.get(call.lineno, "<module>"),
+                        detail=name,
+                        message=f"{name}() mutates/reads numpy's "
+                                f"process-global RNG state",
+                        hint="use a threaded np.random.Generator "
+                             "method on the shared stream"))
+        return out
+
+
+@register_rule
+class UnseededGeneratorRule(AnalyzerRule):
+    """RNG003: ``default_rng()`` / ``PRNGKey()`` with no seed in
+    library code — fresh OS entropy, unreproducible by construction."""
+
+    rule = "RNG003"
+    family = "rng"
+    severity = "error"
+    title = "unseeded fresh generator in library code"
+
+    def check(self, ctx):
+        out = []
+        for path, tree in ctx.modules.items():
+            if not ctx.is_library(path):
+                continue
+            aliases = import_aliases(tree)
+            scopes = ctx.scopes(path)
+            for call in _calls(tree):
+                name = call_name(call, aliases)
+                if (name in _GEN_CTORS and not call.args
+                        and not call.keywords):
+                    short = name.rsplit(".", 1)[1]
+                    out.append(Finding(
+                        rule=self.rule, severity=self.severity,
+                        path=path, line=call.lineno,
+                        scope=scopes.get(call.lineno, "<module>"),
+                        detail=f"{short}()",
+                        message=f"{short}() seeds from OS entropy — "
+                                f"every run differs",
+                        hint="seed from cfg.seed (or a salted "
+                             "SeedSequence) or accept a threaded rng "
+                             "parameter"))
+        return out
+
+
+@register_rule
+class ConstantSeedShadowRule(AnalyzerRule):
+    """RNG004: a generator built from a hard-coded constant seed inside
+    a function that already takes a threaded rng/key parameter — the
+    classic silent-fallback bug: every un-threaded call returns the
+    SAME 'random' result while the call site looks seeded."""
+
+    rule = "RNG004"
+    family = "rng"
+    severity = "error"
+    title = "constant-seeded generator shadows a threaded rng param"
+
+    def check(self, ctx):
+        out = []
+        for path, tree in ctx.modules.items():
+            if not ctx.is_library(path):
+                continue
+            aliases = import_aliases(tree)
+            for qual, fn in ctx.walk_functions(tree):
+                if not (_param_names(fn) & _RNG_PARAMS):
+                    continue
+                for call in ast.walk(fn):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    name = call_name(call, aliases)
+                    if name not in _GEN_CTORS or not call.args:
+                        continue
+                    if all(is_constant_expr(a) for a in call.args):
+                        short = name.rsplit(".", 1)[1]
+                        out.append(Finding(
+                            rule=self.rule, severity=self.severity,
+                            path=path, line=call.lineno, scope=qual,
+                            detail=f"{short}({unparse_trim(call.args[0], 24)})",
+                            message=f"{short} built from a constant "
+                                    f"seed inside {qual}(), which "
+                                    f"takes a threaded rng parameter "
+                                    f"— unthreaded calls all produce "
+                                    f"identical draws",
+                            hint="require the rng parameter (raise "
+                                 "when None) instead of a constant-"
+                                 "seed fallback"))
+        return out
+
+
+@register_rule
+class SetIterationRule(AnalyzerRule):
+    """RNG005: iterating a ``set``/``frozenset`` in the simulation
+    layers — set order is hash-salt/insertion dependent, so any loop
+    over one can reorder scheduling decisions or trace rows."""
+
+    rule = "RNG005"
+    family = "rng"
+    severity = "error"
+    title = "unordered-set iteration in a simulation layer"
+
+    def _is_set_expr(self, node, aliases) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        if isinstance(node, ast.Call):
+            return call_name(node, aliases) in ("set", "frozenset")
+        return False
+
+    def check(self, ctx):
+        out = []
+        for path, tree in ctx.modules.items():
+            if not ctx.is_sim_layer(path):
+                continue
+            aliases = import_aliases(tree)
+            scopes = ctx.scopes(path)
+            # Names bound to set-producing expressions, per enclosing
+            # scope (module level keys on "<module>").
+            tainted: dict = {}
+            for node in ast.walk(tree):
+                if (isinstance(node, ast.Assign)
+                        and self._is_set_expr(node.value, aliases)):
+                    sc = scopes.get(node.lineno, "<module>")
+                    for tgt in node.targets:
+                        if isinstance(tgt, ast.Name):
+                            tainted.setdefault(sc, set()).add(tgt.id)
+
+            def iter_exprs(node):
+                if isinstance(node, (ast.For, ast.AsyncFor)):
+                    yield node.iter
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.DictComp, ast.GeneratorExp)):
+                    for gen in node.generators:
+                        yield gen.iter
+
+            for node in ast.walk(tree):
+                for it in iter_exprs(node):
+                    sc = scopes.get(node.lineno, "<module>")
+                    bad = self._is_set_expr(it, aliases) or (
+                        isinstance(it, ast.Name)
+                        and it.id in tainted.get(sc, ()))
+                    if bad:
+                        what = (it.id if isinstance(it, ast.Name)
+                                else "set-literal")
+                        out.append(Finding(
+                            rule=self.rule, severity=self.severity,
+                            path=path, line=node.lineno, scope=sc,
+                            detail=what,
+                            message=f"iteration over unordered set "
+                                    f"{what!r} — order is undefined "
+                                    f"across runs/salts",
+                            hint="iterate sorted(...) or keep an "
+                                 "ordered container (list / np array)"))
+        return out
+
+
+@register_rule
+class IdSortRule(AnalyzerRule):
+    """RNG006: ``sorted(..., key=id)`` / ``.sort(key=id)`` — object
+    addresses vary per process, the order is noise."""
+
+    rule = "RNG006"
+    family = "rng"
+    severity = "error"
+    title = "id()-keyed sort"
+
+    def check(self, ctx):
+        out = []
+        for path, tree in ctx.modules.items():
+            if not ctx.is_library(path):
+                continue
+            aliases = import_aliases(tree)
+            scopes = ctx.scopes(path)
+            for call in _calls(tree):
+                name = call_name(call, aliases)
+                if not (name == "sorted" or name.endswith(".sort")):
+                    continue
+                for kw in call.keywords:
+                    if (kw.arg == "key" and isinstance(kw.value, ast.Name)
+                            and kw.value.id == "id"):
+                        out.append(Finding(
+                            rule=self.rule, severity=self.severity,
+                            path=path, line=call.lineno,
+                            scope=scopes.get(call.lineno, "<module>"),
+                            detail=name,
+                            message="sort keyed on id() orders by "
+                                    "memory address — different every "
+                                    "process",
+                            hint="sort on a stable field (index, name, "
+                                 "tuple of values)"))
+        return out
+
+
+@register_rule
+class WallClockRule(AnalyzerRule):
+    """RNG007: wall-clock reads inside ``core/``, ``net/``, ``fl/`` —
+    simulated time must come from the slot counter / event engine
+    clock, never the host."""
+
+    rule = "RNG007"
+    family = "rng"
+    severity = "error"
+    title = "wall-clock read in a simulation layer"
+
+    def check(self, ctx):
+        out = []
+        for path, tree in ctx.modules.items():
+            if not ctx.is_sim_layer(path):
+                continue
+            aliases = import_aliases(tree)
+            scopes = ctx.scopes(path)
+            for call in _calls(tree):
+                name = call_name(call, aliases)
+                if name in _WALLCLOCK:
+                    out.append(Finding(
+                        rule=self.rule, severity=self.severity,
+                        path=path, line=call.lineno,
+                        scope=scopes.get(call.lineno, "<module>"),
+                        detail=name,
+                        message=f"{name}() reads the host clock inside "
+                                f"a simulation layer",
+                        hint="use the engine clock (EventEngine.t / "
+                             "slot index); wall-clock belongs in "
+                             "benchmarks only"))
+        return out

@@ -12,7 +12,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import jax
 import numpy as np
@@ -24,7 +24,7 @@ def _flatten(tree):
 
 
 def save_checkpoint(ckpt_dir: str, round_idx: int, tree, *,
-                    meta: Optional[dict] = None, keep: int = 3) -> str:
+                    meta: dict | None = None, keep: int = 3) -> str:
     """Atomically write ``round_<idx>.npz`` + manifest; GC old rounds.
 
     Leaves are stored as raw byte buffers with dtype/shape recorded in
@@ -82,7 +82,7 @@ def _list_rounds(ckpt_dir: str):
     return out
 
 
-def latest_round(ckpt_dir: str) -> Optional[int]:
+def latest_round(ckpt_dir: str) -> int | None:
     rounds = _list_rounds(ckpt_dir)
     return max(rounds) if rounds else None
 
@@ -105,7 +105,7 @@ def load_checkpoint(ckpt_dir: str, round_idx: int, like_tree):
 
 
 def restore_or_init(ckpt_dir: str, init_fn: Callable[[], tuple], *,
-                    like_fn: Optional[Callable] = None):
+                    like_fn: Callable | None = None):
     """Resume from the latest round if one exists, else initialize.
 
     ``init_fn() -> (tree, meta)``.  Returns (tree, meta, start_round).

@@ -14,9 +14,7 @@ recurrentgemma); pure full-attention archs skip it.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
-from repro.models import ArchConfig
 
 
 @dataclass(frozen=True)
@@ -39,7 +37,7 @@ SUBQUADRATIC = {"xlstm-350m", "recurrentgemma-2b"}
 ENCODER_ONLY = {"hubert-xlarge"}
 
 
-def cell_skip_reason(arch: str, shape: str) -> Optional[str]:
+def cell_skip_reason(arch: str, shape: str) -> str | None:
     if arch in ENCODER_ONLY and shape in ("decode_32k", "long_500k"):
         return "encoder-only: no autoregressive decode step"
     if shape == "long_500k" and arch not in SUBQUADRATIC:

@@ -22,9 +22,15 @@ def random_overlay(
     style with retry) plus a fraction of extra random edges so neighbor
     counts are heterogeneous above ``m``.  Returns a dense symmetric bool
     adjacency matrix with zero diagonal.
+
+    ``rng`` must be the caller's threaded generator: a constant-seed
+    fallback here would hand every un-threaded caller the SAME overlay
+    while looking random (swarmlint RNG004).
     """
     if rng is None:
-        rng = np.random.default_rng(0)
+        raise ValueError(
+            "random_overlay requires a threaded np.random.Generator; "
+            "pass the round's rng (e.g. default_rng(cfg.seed))")
     m = min_degree
     if m >= n:
         raise ValueError(f"min_degree {m} must be < n {n}")

@@ -46,7 +46,7 @@ seed-for-seed in ``tests/test_session.py``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import numpy as np
 
@@ -123,7 +123,7 @@ class SprayPolicy:
     targets)."""
 
     def plan(self, session: "SwarmSession",
-             ids: np.ndarray) -> Optional[SprayPlan]:
+             ids: np.ndarray) -> SprayPlan | None:
         return None
 
 
@@ -148,8 +148,8 @@ class ChurnAwareSpray(SprayPolicy):
 
     def __init__(self):
         # (n_peers, m) ledgers, -1 = dead slot; grown lazily with joins.
-        self._offs: Optional[np.ndarray] = None
-        self._holds: Optional[np.ndarray] = None
+        self._offs: np.ndarray | None = None
+        self._holds: np.ndarray | None = None
 
     def _grown(self, P: int, m: int):
         if self._offs is None:
@@ -162,7 +162,7 @@ class ChurnAwareSpray(SprayPolicy):
         return self._offs, self._holds
 
     def plan(self, ses: "SwarmSession",
-             ids: np.ndarray) -> Optional[SprayPlan]:
+             ids: np.ndarray) -> SprayPlan | None:
         """Fully vectorized over the (source, tunnel-slot) ledger — no
         per-peer Python loop at the round boundary (the boundary is on
         the per-round critical path at paper-scale populations)."""
@@ -247,7 +247,7 @@ class SessionRound:
         default_factory=lambda: np.zeros(0, np.int64))
     dropped_midround: np.ndarray = field(
         default_factory=lambda: np.zeros(0, np.int64))
-    spray_plan: Optional[SprayPlan] = None
+    spray_plan: SprayPlan | None = None
 
     @property
     def t_warm_s(self) -> float:
@@ -308,12 +308,12 @@ class SwarmSession:
 
     def __init__(self, cfg: SwarmConfig, *,
                  churn_rate: float = 0.0,
-                 churn: Optional[ChurnModel] = None,
+                 churn: ChurnModel | None = None,
                  link_model: cap.LinkModel = cap.RESIDENTIAL,
                  bt_mode: str = "auto",
-                 round_seed: Optional[Callable[[int], int]] = None,
-                 evolve_overlay: Optional[bool] = None,
-                 spray_policy: Optional[SprayPolicy] = None,
+                 round_seed: Callable[[int], int] | None = None,
+                 evolve_overlay: bool | None = None,
+                 spray_policy: SprayPolicy | None = None,
                  time_engine: str = "slot",
                  net=None):
         if churn is None:
@@ -346,7 +346,7 @@ class SwarmSession:
         self.rejoin_at = np.full(cfg.n, -1, dtype=np.int64)
         self.round_idx = 0
         self.history: list[SessionRound] = []
-        self._pending: Optional[tuple] = None   # begun-but-not-run round
+        self._pending: tuple | None = None   # begun-but-not-run round
 
         if self.evolve:
             self.adj = random_overlay(cfg.n, cfg.min_degree,

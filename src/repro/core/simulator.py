@@ -27,8 +27,7 @@ reconstructable active set — standard partial-participation semantics.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -52,10 +51,10 @@ class RoundResult:
     adj: np.ndarray
     up: np.ndarray
     down: np.ndarray
-    maxflow_ub: Optional[np.ndarray] = None   # per warm-up slot
-    warmup_sent_per_slot: Optional[np.ndarray] = None
+    maxflow_ub: np.ndarray | None = None   # per warm-up slot
+    warmup_sent_per_slot: np.ndarray | None = None
     fluid_bt: bool = False
-    tracker_log: Optional[dict] = None
+    tracker_log: dict | None = None
 
 
 class RoundSimulator:

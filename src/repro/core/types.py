@@ -14,8 +14,8 @@ Conventions
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, TYPE_CHECKING
+from dataclasses import dataclass
+from typing import TYPE_CHECKING
 
 import numpy as np
 
@@ -134,8 +134,8 @@ class RoundMetrics:
     overall_utilization: float = 0.0
     warmup_share: float = 0.0         # t_warm / t_round
     failed_open: bool = False         # warm-up could not complete by s_max
-    per_slot_warmup_util: Optional[np.ndarray] = None
-    active_at_deadline: Optional[np.ndarray] = None  # bool (n,)
+    per_slot_warmup_util: np.ndarray | None = None
+    active_at_deadline: np.ndarray | None = None  # bool (n,)
 
     def as_dict(self) -> dict:
         d = {k: v for k, v in dataclasses.asdict(self).items()

@@ -136,7 +136,8 @@ def make_fl_train_step(cfg, mesh, *, lr_schedule, n_pods: int,
                 # advance the LR schedule).  Same zero-mass definition
                 # as the aggregator's, so they cannot drift.
                 has_mass = jnp.any(wn > 0)
-                pick = lambda new, old: jnp.where(has_mass, new, old)
+                def pick(new, old):
+                    return jnp.where(has_mass, new, old)
                 new_params = jax.tree_util.tree_map(pick, new_params,
                                                     params)
                 new_opt = jax.tree_util.tree_map(pick, new_opt, opt)

@@ -18,7 +18,6 @@ and catch up the same way.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,8 +68,8 @@ class FLResult:
     agreement: bool = True    # FLTorrent: all clients agreed every round
     reconstruct_frac: float = 1.0
     # Churn diagnostics (fltorrent with churn_rate > 0):
-    participation: Optional[list] = None  # per-round active fraction
-    rejoin_rounds: Optional[list] = None  # rounds where a client re-synced
+    participation: list | None = None  # per-round active fraction
+    rejoin_rounds: list | None = None  # rounds where a client re-synced
     stale_seen: bool = False   # some catch-up client really held stale params
     caught_up: bool = True     # every active client trained from current params
 

@@ -21,7 +21,6 @@ GQA is handled in the BlockSpec index maps: the kv head index is
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +31,8 @@ NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                  scale: float, causal: bool, window: Optional[int],
-                  softcap: Optional[float], block_q: int, block_k: int,
+                  scale: float, causal: bool, window: int | None,
+                  softcap: float | None, block_q: int, block_k: int,
                   q_offset: int, kv_offset: int, kv_len: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
@@ -103,10 +102,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-                    causal: bool = True, window: Optional[int] = None,
-                    softcap: Optional[float] = None, q_offset: int = 0,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None, q_offset: int = 0,
                     kv_offset: int = 0,
-                    scale: Optional[float] = None,
+                    scale: float | None = None,
                     block_q: int = 512, block_k: int = 512,
                     interpret: bool = False) -> jnp.ndarray:
     """q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D); returns (B, Hq, Tq, D)."""

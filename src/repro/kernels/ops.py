@@ -20,7 +20,6 @@ kernel tests sweep "interpret" vs ref.py.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -169,10 +168,10 @@ _pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
 
 
 def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-              causal: bool = True, window: Optional[int] = None,
-              softcap: Optional[float] = None, q_offset: int = 0,
+              causal: bool = True, window: int | None = None,
+              softcap: float | None = None, q_offset: int = 0,
               kv_offset: int = 0,
-              scale: Optional[float] = None, impl: str = "xla",
+              scale: float | None = None, impl: str = "xla",
               block_q: int = 512, block_k: int = 512) -> jnp.ndarray:
     """Dispatching multi-head attention; see module docstring."""
     if impl == "pallas":
@@ -230,7 +229,7 @@ def _xla_rglru(x, a, gate_x, h0):
 
 
 def rglru(x: jnp.ndarray, a: jnp.ndarray, gate_x: jnp.ndarray,
-          h0: Optional[jnp.ndarray] = None, *, impl: str = "xla",
+          h0: jnp.ndarray | None = None, *, impl: str = "xla",
           block_t: int = 256, block_d: int = 512):
     """Gated diagonal linear recurrence; returns (y (B,T,D), h_T (B,D))."""
     if impl == "pallas":

@@ -6,7 +6,6 @@ where the kernels are blocked.  Tests sweep shapes/dtypes and
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +20,7 @@ NEG_INF = -1e30
 # ----------------------------------------------------------------------
 
 def attention_mask(q_len: int, kv_len: int, *, causal: bool,
-                   window: Optional[int], q_offset: int = 0,
+                   window: int | None, q_offset: int = 0,
                    kv_offset: int = 0) -> jnp.ndarray:
     """(q_len, kv_len) bool mask. Query i sits at absolute position
     ``q_offset + i``; key j at absolute position ``kv_offset + j``
@@ -40,10 +39,10 @@ def attention_mask(q_len: int, kv_len: int, *, causal: bool,
 
 
 def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-        causal: bool = True, window: Optional[int] = None,
-        softcap: Optional[float] = None, q_offset: int = 0,
+        causal: bool = True, window: int | None = None,
+        softcap: float | None = None, q_offset: int = 0,
         kv_offset: int = 0,
-        scale: Optional[float] = None) -> jnp.ndarray:
+        scale: float | None = None) -> jnp.ndarray:
     """Reference multi-head attention.
 
     q: (B, Hq, Tq, D); k, v: (B, Hkv, Tk, D) with Hq % Hkv == 0 (GQA).
@@ -73,7 +72,7 @@ def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
 # ----------------------------------------------------------------------
 
 def rglru(x: jnp.ndarray, a: jnp.ndarray, gate_x: jnp.ndarray,
-          h0: Optional[jnp.ndarray] = None) -> tuple[jnp.ndarray, jnp.ndarray]:
+          h0: jnp.ndarray | None = None) -> tuple[jnp.ndarray, jnp.ndarray]:
     """h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (gx_t * x_t).
 
     x, a, gate_x: (B, T, D) with a in (0, 1).  Returns (y, h_T).

@@ -28,7 +28,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Optional
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
@@ -116,7 +115,7 @@ class Computation:
 def parse_module(txt: str) -> dict:
     """Split HLO text into computations with their instructions."""
     comps: dict[str, Computation] = {}
-    cur: Optional[Computation] = None
+    cur: Computation | None = None
     # Header lines start at column 0 and end with '{'; the parameter
     # list may contain nested tuple parens, so never try to span it.
     header = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
@@ -242,7 +241,7 @@ def _fusion_flops(comp: Computation, comps: dict, name_types: dict):
     return fl, tr
 
 
-def _called(line: str, key: str) -> Optional[str]:
+def _called(line: str, key: str) -> str | None:
     m = re.search(key + r"=%?([\w.\-]+)", line)
     return m.group(1) if m else None
 

@@ -15,14 +15,12 @@ Input layouts per shape kind (assignment):
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import SHAPES, ShapeSpec
+from repro.configs.base import ShapeSpec
 from repro.dist.fl_step import make_fl_train_step, make_serve_step
 from repro.models import (ArchConfig, forward, init_decode_cache,
                           init_params, prefill)
@@ -99,7 +97,7 @@ def cache_specs(cfg: ArchConfig, cache_shapes, mesh, batch: int):
 
 
 def build_cell(cfg: ArchConfig, shape: ShapeSpec, mesh, *,
-               rules: Optional[dict] = None, microbatch: int = 0,
+               rules: dict | None = None, microbatch: int = 0,
                torrent_blocks: int = 4, compress: bool = False,
                ce_chunk: int = 512):
     """Returns dict(step, args, in_specs, out_specs, meta)."""

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -42,7 +41,7 @@ def embed_tokens(embed: jnp.ndarray, tokens: jnp.ndarray,
 
 
 def unembed_logits(x: jnp.ndarray, embed_t: jnp.ndarray,
-                   softcap: Optional[float]) -> jnp.ndarray:
+                   softcap: float | None) -> jnp.ndarray:
     """x: (..., D) @ embed_t (D, V) with optional final softcap."""
     logits = jnp.einsum("...d,dv->...v", x, embed_t,
                         preferred_element_type=jnp.float32)
@@ -53,7 +52,7 @@ def unembed_logits(x: jnp.ndarray, embed_t: jnp.ndarray,
 
 def chunked_ce_loss(x: jnp.ndarray, embed_t: jnp.ndarray,
                     labels: jnp.ndarray, mask: jnp.ndarray, *,
-                    softcap: Optional[float], chunk: int = 512
+                    softcap: float | None, chunk: int = 512
                     ) -> jnp.ndarray:
     """Cross-entropy without materializing full (B, T, V) logits.
 
@@ -97,7 +96,7 @@ def dense_init(key, shape, dtype, in_axis: int = 0):
 
 
 def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray,
-                  state: Optional[jnp.ndarray] = None):
+                  state: jnp.ndarray | None = None):
     """Depthwise causal conv.  x: (B, T, D); w: (W, D).
 
     Returns (y (B,T,D), new_state (B, W-1, D)) — state carries the last

@@ -18,7 +18,6 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass
-from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -32,10 +31,10 @@ class ArchConfig:
     head_dim: int
     d_ff: int
     vocab: int
-    pattern: Tuple[str, ...] = ("global",)
-    window: Optional[int] = None          # sliding-window width ("local")
-    attn_softcap: Optional[float] = None  # gemma2 attention logit softcap
-    final_softcap: Optional[float] = None  # gemma2 final logit softcap
+    pattern: tuple[str, ...] = ("global",)
+    window: int | None = None          # sliding-window width ("local")
+    attn_softcap: float | None = None  # gemma2 attention logit softcap
+    final_softcap: float | None = None  # gemma2 final logit softcap
     qk_norm: bool = False
     causal: bool = True                   # False => encoder-only (hubert)
     has_embedding: bool = True            # False => frame-embedding input
@@ -69,7 +68,7 @@ class ArchConfig:
         return self.n_layers // len(self.pattern)
 
     @property
-    def tail_kinds(self) -> Tuple[str, ...]:
+    def tail_kinds(self) -> tuple[str, ...]:
         return self.pattern[: self.n_layers % len(self.pattern)]
 
     @property

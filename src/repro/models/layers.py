@@ -15,8 +15,6 @@ absolute position).  Caches for "local" layers are rolling buffers of
 """
 from __future__ import annotations
 
-import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -105,7 +103,7 @@ def _init_attn(cfg: ArchConfig, kind: str, key) -> dict:
 
 
 def _attention_mix(cfg: ArchConfig, kind: str, p: dict, h: jnp.ndarray,
-                   mode: str, cache: Optional[dict], pos):
+                   mode: str, cache: dict | None, pos):
     """Returns (attn_out (B,T,qd), new_cache)."""
     b, t, d = h.shape
     hq, hkv, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim

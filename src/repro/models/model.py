@@ -17,8 +17,6 @@ Caches mirror the same structure (stacked per slot + tail list).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -78,7 +76,7 @@ def _embed_inputs(cfg: ArchConfig, p: dict, inputs) -> jnp.ndarray:
 
 
 def _run_layers(cfg: ArchConfig, p: dict, x: jnp.ndarray, mode: str,
-                caches: Optional[dict], pos):
+                caches: dict | None, pos):
     """Scan over cycles + unrolled tail.  Returns (x, new_caches)."""
     plen = len(cfg.pattern)
 

@@ -27,8 +27,9 @@ def global_norm(tree) -> jnp.ndarray:
 
 
 def adamw_init(params) -> OptState:
-    f32 = lambda t: jax.tree_util.tree_map(
-        lambda x: x.astype(jnp.float32), t)
+    def f32(t):
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(jnp.float32), t)
     zeros = jax.tree_util.tree_map(
         lambda x: jnp.zeros(x.shape, jnp.float32), params)
     return OptState(step=jnp.zeros((), jnp.int32), master=f32(params),

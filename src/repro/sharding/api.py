@@ -26,7 +26,7 @@ import enum
 import inspect
 import re
 import threading
-from typing import Optional, Sequence
+from collections.abc import Sequence
 
 import jax
 import numpy as np
@@ -251,7 +251,7 @@ def spec_for_path(path: str, shape: tuple, mesh, rules: dict,
     return P(*parts)
 
 
-def param_specs(params, mesh, rules: Optional[dict] = None, *,
+def param_specs(params, mesh, rules: dict | None = None, *,
                 stacked_prefixes: Sequence[str] = ("cycles",),
                 zero: bool = True):
     """Tree of PartitionSpec matching a params pytree, by path names."""

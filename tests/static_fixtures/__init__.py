@@ -1,0 +1,8 @@
+"""Fixture modules for repro.analysis unit tests.
+
+Each ``*_bad.py`` violates exactly the constructs its rule family
+flags; each ``*_good.py`` does the same job the disciplined way and
+must stay finding-free.  Nothing here is executed by the simulator —
+``vis_bad.py`` in particular registers nothing and is never imported
+at runtime; only the analyzer reads these files.
+"""

@@ -1,0 +1,29 @@
+"""Known-bad jit-readiness fixture.
+
+Defines functions named like the kernel-slated targets (the jit rules
+match on slated names under ``--assume-library``) with every
+untraceable construct: value branches, host coercions, data-dependent
+loops.
+"""
+import numpy as np
+
+
+def maxmin_rates(rem, rates):
+    if rem.any():                          # JIT101
+        rates = rates + 1
+    if float(rem.sum()) > 0:               # JIT101 + JIT102
+        rates = rates * 2
+    return rates
+
+
+def transport(rem, rates):
+    total = 0.0
+    while rem.any():                       # JIT103
+        step = rem.min().item()            # JIT102
+        rem = rem - step
+        total += step
+    while True:                            # JIT103
+        break
+    for i in np.flatnonzero(rem):          # JIT103
+        total += int(rates[i] * 2.0)       # JIT102
+    return total

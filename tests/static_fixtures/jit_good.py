@@ -1,0 +1,26 @@
+"""Known-good jit-readiness fixture: the same shapes, trace-safe.
+
+Masked arithmetic instead of value branches, bounded loops, no host
+round-trips — what the slated functions look like after the kernel
+rewrite.
+"""
+import numpy as np
+
+
+def maxmin_rates(rem, rates, n_passes=8):
+    for _ in range(n_passes):              # bounded, data-independent
+        mask = rem > 0
+        rates = np.where(mask, rates + 1, rates)
+        rem = np.where(mask, rem - 1, rem)
+    return rates
+
+
+def transport(rem, rates, max_steps=64):
+    total = np.zeros(())
+    for _ in range(max_steps):             # bounded fori-style loop
+        alive = rem > 0
+        step = np.min(np.where(alive, rem, np.inf))
+        step = np.where(np.isfinite(step), step, 0.0)
+        rem = rem - step * alive
+        total = total + step
+    return total

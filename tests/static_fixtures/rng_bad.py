@@ -1,0 +1,45 @@
+"""Known-bad rng-discipline fixture: every RNG rule fires here."""
+import random
+import time
+from datetime import datetime
+
+import numpy as np
+
+
+def stdlib_draw(n):
+    # RNG001: process-global stdlib stream
+    return [random.random() for _ in range(n)]
+
+
+def legacy_global(n):
+    np.random.seed(0)                       # RNG002
+    return np.random.choice(n, size=n)      # RNG002
+
+
+def fresh_entropy():
+    rng = np.random.default_rng()           # RNG003: OS entropy
+    return rng.integers(0, 10)
+
+
+def shadowed_fallback(n, rng=None):
+    if rng is None:
+        rng = np.random.default_rng(0)      # RNG004: constant seed
+    return rng.integers(0, n)
+
+
+def set_order(ids):
+    peers = set(ids)
+    out = []
+    for p in peers:                         # RNG005: set iteration
+        out.append(p)
+    out += [q for q in {1, 2, 3}]           # RNG005: set literal
+    return out
+
+
+def identity_sort(objs):
+    return sorted(objs, key=id)             # RNG006
+
+
+def stamp_rows(rows):
+    now = time.perf_counter()               # RNG007
+    return [(r, now, datetime.now()) for r in rows]     # RNG007

@@ -1,0 +1,31 @@
+"""Known-good rng-discipline fixture: the same jobs, threaded — no
+rule may fire."""
+import numpy as np
+
+
+def threaded_draw(n, rng: np.random.Generator):
+    return rng.random(n)
+
+
+def entry_point(cfg_seed: int):
+    # Seeding from config at an entry point is the contract, not a
+    # violation; salted derived streams likewise.
+    rng = np.random.default_rng(cfg_seed)
+    child = np.random.default_rng(
+        np.random.SeedSequence([cfg_seed, 0x5A17]))
+    return rng, child
+
+
+def required_param(n, rng=None):
+    if rng is None:
+        raise ValueError("pass a threaded Generator")
+    return rng.integers(0, n)
+
+
+def ordered_iteration(ids):
+    peers = set(ids)
+    return [p for p in sorted(peers)]
+
+
+def stable_sort(objs):
+    return sorted(objs, key=lambda o: o[0])

@@ -1,0 +1,47 @@
+"""Known-bad visibility fixture: a deliberately over-reaching policy.
+
+``PeekingFlooder`` declares the weakest tier (``"none"``) but its
+schedule() call graph reaches full-tier state three ways — directly,
+through a self-method, and through a module helper two hops deep.  It
+is NEVER registered or executed; runtime tests cannot catch it.  Only
+the lint pass can — which is the point (ISSUE 6 acceptance).
+"""
+from repro.core.policy import SchedulerPolicy
+
+
+def _drill(v):
+    return _drill2(v)
+
+
+def _drill2(v):
+    return v.supply()                  # full tier, two hops from schedule
+
+
+class PeekingFlooder(SchedulerPolicy):
+    """Claims to see nothing; reads everything."""
+
+    name = "peeking_flooder"
+    visibility = "none"
+
+    def schedule(self, view):
+        raw = view._engine_state()     # the ungated engine door
+        cand = self._peek(view)        # full tier via self-method
+        both = _drill(view)            # full tier via module helpers
+        del raw, both
+        return view.empty() if cand is None else cand
+
+    def _peek(self, view):
+        alias = view
+        return alias.candidate_columns()
+
+
+class NosyNeighborhood(SchedulerPolicy):
+    """Neighborhood tier reading the raw state property."""
+
+    name = "nosy_neighborhood"
+    visibility = "neighborhood"
+
+    def schedule(self, view):
+        st = view.state                # full-tier property
+        del st
+        return view.empty()

@@ -1,0 +1,37 @@
+"""Known-good visibility fixture: tier-honest policies, no findings.
+
+``PoliteNeighborhood`` stays inside its declared tier (neighborhood
+union + ungated protocol facts + visibility-free mechanics);
+``HonestCentral`` reads full-tier state but *declares* full.
+"""
+import numpy as np
+
+from repro.core.policy import SchedulerPolicy
+
+
+class PoliteNeighborhood(SchedulerPolicy):
+    name = "polite_neighborhood"
+    visibility = "neighborhood"
+
+    def schedule(self, view):
+        cand, union = view.availability_union()   # exactly its tier
+        open_rx = np.flatnonzero(view.receivers_open())
+        if cand.size == 0 or open_rx.size == 0:
+            return view.empty()
+        v = int(open_rx[0])
+        ids = np.flatnonzero(union[v])[: int(view.down[v])]
+        nbr = np.flatnonzero(view.adj[v])
+        tgt = view.rng.choice(nbr, size=ids.size)
+        ok = view.resolve_requests(tgt, cand[ids])
+        return (tgt[ok], np.full(int(ok.sum()), v, np.int64),
+                cand[ids[ok]])
+
+
+class HonestCentral(SchedulerPolicy):
+    name = "honest_central"
+    visibility = "full"
+
+    def schedule(self, view):
+        cand, sup = view.supply()                 # full, declared full
+        del cand, sup
+        return view.empty()

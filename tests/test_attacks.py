@@ -1,7 +1,6 @@
 """Attribution attacks + ASR (paper §IV-C, §V-D): hardening ordering,
 defense ablation, collusion pooling."""
 import numpy as np
-import pytest
 
 from repro.core import SwarmConfig, simulate_round
 from repro.core.attacks import (random_guess_baseline, run_all_attacks)

@@ -1,12 +1,10 @@
 """Adversary B / §III-E: Byzantine peers degrade liveness, never
 integrity or honest-sender unlinkability."""
 import numpy as np
-import pytest
 
 from repro.core import SwarmConfig
 from repro.core.byzantine import ByzantineModel, claimed_inventory
-from repro.core.privacy import check_eq1, empirical_posteriors, \
-    per_transfer_cap
+from repro.core.privacy import per_transfer_cap
 from repro.core.simulator import RoundSimulator
 
 

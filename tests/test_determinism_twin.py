@@ -1,0 +1,54 @@
+"""Dynamic determinism twin for the rng-discipline family (ISSUE 6):
+the static rules promise one threaded rng stream; this pins the
+observable consequence — the same seed replays the same session
+byte-for-byte, on BOTH time engines, including the continuous-time
+``t_start``/``t_end`` stamps the event engine adds."""
+import numpy as np
+import pytest
+
+from repro.core import SwarmConfig, SwarmSession
+from repro.core.overlay import random_overlay
+from repro.net import NetConfig
+
+CFG = SwarmConfig(n=16, chunks_per_update=8, min_degree=4,
+                  s_max=3000, seed=11)
+NET = NetConfig(tracker_rtt_s=0.1, latency_lo_s=0.005,
+                latency_hi_s=0.030)
+
+
+def _session_trace(engine: str):
+    ses = SwarmSession(CFG, churn_rate=0.15, time_engine=engine,
+                       net=NET if engine == "event" else None)
+    ses.run(3)
+    return ses.trace()
+
+
+@pytest.mark.parametrize("engine", ["slot", "event"])
+def test_session_twin_trace_byte_identical(engine):
+    a = _session_trace(engine)
+    b = _session_trace(engine)
+    assert len(a) == len(b) and len(a) > 0
+    for k in a.keys():
+        col_a, col_b = getattr(a, k), getattr(b, k)
+        assert col_a.dtype == col_b.dtype, k
+        assert col_a.tobytes() == col_b.tobytes(), (
+            f"column {k!r} differs between twin runs at seed "
+            f"{CFG.seed} on the {engine!r} engine")
+
+
+def test_event_twin_time_columns_are_real_and_identical():
+    a = _session_trace("event")
+    assert (a.t_end >= a.t_start).all() and a.t_end.max() > 0
+    b = _session_trace("event")
+    assert a.t_start.tobytes() == b.t_start.tobytes()
+    assert a.t_end.tobytes() == b.t_end.tobytes()
+
+
+def test_random_overlay_requires_threaded_rng():
+    """Regression pin for the RNG004 fix: the old constant-seed
+    fallback handed every un-threaded caller the SAME overlay."""
+    with pytest.raises(ValueError, match="threaded np.random.Generator"):
+        random_overlay(8, 3)
+    rng = np.random.default_rng(3)
+    adj = random_overlay(8, 3, rng=rng)
+    assert adj.shape == (8, 8) and (adj.sum(1) >= 3).all()

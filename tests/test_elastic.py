@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import ARCHS, get_config
+from repro.configs import get_config
 from repro.models import init_params
 from repro.sharding.api import DEFAULT_RULES, param_specs
 

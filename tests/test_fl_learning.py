@@ -8,7 +8,6 @@ reproduced in benchmarks/table2_learning.py; here we assert the cheap
 robust part (early-round gossip attenuation under heterogeneity).
 """
 import numpy as np
-import pytest
 
 from repro.fl.client import LocalSpec
 from repro.fl.runner import FLConfig, run_experiment

@@ -124,8 +124,9 @@ def test_participation_exact_under_geometric_rejoin():
 def test_fixed_rejoin_stream_unperturbed():
     """rejoin_dist='fixed' (default) draws nothing extra: churn
     trajectories are bit-identical to the pre-knob behaviour."""
-    mk = lambda dist: SwarmSession(_cfg(seed=9), churn=ChurnModel(
-        leave_prob=0.3, rejoin_after=2, rejoin_dist=dist))
+    def mk(dist):
+        return SwarmSession(_cfg(seed=9), churn=ChurnModel(
+            leave_prob=0.3, rejoin_after=2, rejoin_dist=dist))
     a, b = mk("fixed"), mk("fixed")
     ra, rb = a.run(6), b.run(6)
     for x, y in zip(ra, rb):

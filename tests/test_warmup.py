@@ -1,7 +1,6 @@
 """Warm-up mechanics: termination threshold, ablations, K-sweep
 monotonicity, fault tolerance (paper §III-B/E, Figs. 4-5)."""
 import numpy as np
-import pytest
 
 from repro.core import SwarmConfig, simulate_round
 
