@@ -29,7 +29,12 @@ JIT_TARGETS = {
     "repro/core/schedulers.py": (
         "_schedule_centralized_batched", "_count_rows",
         "_extract_prefix"),
-    "repro/net/fairshare.py": ("maxmin_rates", "transport"),
+    "repro/net/fairshare.py": ("maxmin_rates", "transport",
+                               "_maxmin_fill"),
+    # Promoted kernels of the jitted engine (PR 8): staying on the
+    # scorecard keeps host-coercion regressions visible.
+    "repro/core/jit_engine.py": ("_slot_rounds", "_rank_counts",
+                                 "_extract_ranked", "_kth_set_bit"),
 }
 
 _ARRAY_METHODS = {"any", "all", "sum", "min", "max", "item", "argmax",

@@ -126,33 +126,32 @@ def _extract_prefix(rows_p: np.ndarray, bcum: np.ndarray,
     fullb = bcum <= take[:, None]
     blk = fullb.sum(axis=1)
     sel_p = np.where(np.repeat(fullb, _BLK, axis=1), rows_p, np.uint8(0))
+    # Every step below is empty-safe, so the boundary-block refinement
+    # and the decode run unconditionally (jit-clean: no `if arr.size`
+    # branches on array values).
     gb = np.flatnonzero(blk < nblk)
-    if gb.size:
-        blkb = blk[gb]
-        prevb = np.where(
-            blkb > 0,
-            np.take_along_axis(bcum[gb], np.maximum(blkb - 1, 0)[:, None],
-                               axis=1)[:, 0], 0)
-        rblk = take[gb] - prevb                 # bits wanted in boundary
-        bb = np.take_along_axis(rows_p[gb].reshape(gb.size, nblk, _BLK),
-                                blkb[:, None, None], axis=1)[:, 0]
-        wcum = np.cumsum(np.bitwise_count(bb), axis=1, dtype=np.int16)
-        fullw = wcum <= rblk[:, None]
-        selb = np.where(fullw, bb, np.uint8(0))
-        cut = fullw.sum(axis=1)
-        g2 = np.flatnonzero(cut < _BLK)
-        if g2.size:
-            cb = cut[g2]
-            prev = np.where(cb > 0, wcum[g2, np.maximum(cb - 1, 0)], 0)
-            r = np.minimum(rblk[g2] - prev, 8)
-            selb[g2, cb] = _PREFIX[bb[g2, cb], r]
-        sel_p.reshape(g, nblk, _BLK)[gb, blkb] = selb
+    blkb = blk[gb]
+    prevb = np.where(
+        blkb > 0,
+        np.take_along_axis(bcum[gb], np.maximum(blkb - 1, 0)[:, None],
+                           axis=1)[:, 0], 0)
+    rblk = take[gb] - prevb                 # bits wanted in boundary
+    bb = np.take_along_axis(rows_p[gb].reshape(gb.size, nblk, _BLK),
+                            blkb[:, None, None], axis=1)[:, 0]
+    wcum = np.cumsum(np.bitwise_count(bb), axis=1, dtype=np.int16)
+    fullw = wcum <= rblk[:, None]
+    selb = np.where(fullw, bb, np.uint8(0))
+    cut = fullw.sum(axis=1)
+    g2 = np.flatnonzero(cut < _BLK)
+    cb = cut[g2]
+    prev = np.where(cb > 0, wcum[g2, np.maximum(cb - 1, 0)], 0)
+    r = np.minimum(rblk[g2] - prev, 8)
+    selb[g2, cb] = _PREFIX[bb[g2, cb], r]
+    sel_p.reshape(g, nblk, _BLK)[gb, blkb] = selb
     # Decode: uint64 words -> set bytes -> set bits, scanning only the
     # packed plane and then only its populated pieces.
     w64 = sel_p.view(np.uint64)
     g64, i64 = np.nonzero(w64)
-    if g64.size == 0:
-        return sel_p, np.zeros(0, np.int64), np.zeros(0, np.int64)
     b8 = sel_p.reshape(g, mb // 8, 8)[g64, i64]     # (H, 8) bytes
     hz, bz = np.nonzero(b8)
     vals = b8[hz, bz]
@@ -182,10 +181,17 @@ def _candidate_columns(state: SwarmState, sactive: np.ndarray) -> np.ndarray:
     cand = np.flatnonzero(mask)
     cap = cfg.cand_cap
     if cap and cand.size > cap:
-        # keep the rarest `cap` candidates (rarest-first priority
-        # would pick them anyway; large-n Table III runs)
-        sel = np.argpartition(state.replicas[cand], cap - 1)[:cap]
-        cand = np.sort(cand[sel])
+        # Rarity-stratified cap, mirroring SwarmState.candidate_columns:
+        # the rarest cap/2 plus an even stride over the rest, so large
+        # swarms keep servable supply in every neighborhood.
+        half = cap // 2
+        sel = np.argpartition(state.replicas[cand], half - 1)[:half]
+        covered = np.zeros(cand.size, dtype=bool)
+        covered[sel] = True
+        rest = np.flatnonzero(~covered)
+        take = cap - half
+        pos = (np.arange(take, dtype=np.int64) * rest.size) // max(take, 1)
+        cand = np.sort(cand[np.concatenate([sel, rest[pos]])])
     return cand
 
 
@@ -471,7 +477,9 @@ def _schedule_centralized_batched(state: SwarmState, mode: str):
     # first-contact chunk mixes the paper's ablation ASR curves never
     # see.  BT batches stay budget-bound (attacks never read them).
     if warm:
-        batch_cap = max(1, int(np.max(rem_up, initial=0)) // 4)
+        # np scalar end to end: no host coercion (device->host sync
+        # under a jitted build), same value in every integer op below.
+        batch_cap = np.maximum(np.max(rem_up, initial=0) // 4, 1)
     else:
         batch_cap = BIG
 
@@ -834,7 +842,7 @@ CENTRALIZED = {"random_fifo", "random_fastest_first", "greedy_fastest_first"}
 
 def _impl(state: SwarmState) -> str:
     impl = getattr(state.cfg, "scheduler_impl", "batched")
-    if impl not in ("batched", "loop"):
+    if impl not in ("batched", "loop", "jit"):
         raise ValueError(f"unknown scheduler_impl {impl!r}")
     return impl
 
@@ -847,8 +855,12 @@ class CentralizedPolicy(SchedulerPolicy):
 
     def schedule(self, view: SlotView):
         state = view._engine_state()
-        if _impl(state) == "loop":
+        impl = _impl(state)
+        if impl == "loop":
             return _schedule_centralized_loop(state, self.mode)
+        if impl == "jit":
+            from .jit_engine import schedule_centralized_jit
+            return schedule_centralized_jit(state, self.mode)
         return _schedule_centralized_batched(state, self.mode)
 
 
@@ -895,6 +907,9 @@ class DistributedPolicy(SchedulerPolicy):
 
     def schedule(self, view: SlotView):
         state = view._engine_state()
+        # "jit" routes to the batched backend here: the distributed
+        # mode's hot path is already one-shot vectorized (no budgeted
+        # round loop to stage), so a separate kernel would buy nothing.
         if _impl(state) == "loop":
             return _schedule_distributed_loop(state)
         return _schedule_distributed_batched(state)
@@ -923,8 +938,12 @@ class FloodingPolicy(SchedulerPolicy):
 # ----------------------------------------------------------------------
 
 def schedule_centralized(state: SwarmState, mode: str):
-    if _impl(state) == "loop":
+    impl = _impl(state)
+    if impl == "loop":
         return _schedule_centralized_loop(state, mode)
+    if impl == "jit":
+        from .jit_engine import schedule_centralized_jit
+        return schedule_centralized_jit(state, mode)
     return _schedule_centralized_batched(state, mode)
 
 

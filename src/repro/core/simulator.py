@@ -42,6 +42,24 @@ from .trace import TransferTrace
 from .types import RoundMetrics, SwarmConfig
 
 
+def _zero_clock() -> float:
+    return 0.0
+
+
+# Simulated time never reads the host clock (RNG007); the *measurement*
+# clock behind RoundResult.timings is injected by the benchmarks via
+# set_clock(time.perf_counter) and stays a constant zero otherwise.
+_clock = _zero_clock
+
+
+def set_clock(fn) -> None:
+    """Install a wall-clock source for ``RoundResult.timings`` (pass
+    ``None`` to restore the zero clock).  Benchmark-only: phase timings
+    are diagnostics and never feed back into simulated time."""
+    global _clock
+    _clock = fn if fn is not None else _zero_clock
+
+
 @dataclass
 class RoundResult:
     metrics: RoundMetrics
@@ -55,6 +73,7 @@ class RoundResult:
     warmup_sent_per_slot: np.ndarray | None = None
     fluid_bt: bool = False
     tracker_log: dict | None = None
+    timings: dict | None = None    # wall seconds per run() phase (bench)
 
 
 class RoundSimulator:
@@ -237,10 +256,13 @@ class RoundSimulator:
             self.state.active[v] = False
 
     # ------------------------------------------------------------------
-    def run(self, collect_maxflow: bool = False) -> RoundResult:
+    def run(self, collect_maxflow: bool = False,
+            warmup_only: bool = False) -> RoundResult:
         cfg = self.cfg
         st = self.state
         engine = None
+        _clk = _clock
+        _t0 = _clk()
         if self.time_engine == "event":
             from repro.net import EventEngine
             engine = EventEngine(cfg.n, cfg.chunk_bytes, self.up_bps,
@@ -248,6 +270,7 @@ class RoundSimulator:
         if cfg.enable_preround:
             self._spray(engine)
         t_spray_s = engine.t if engine is not None else 0.0
+        _t_spray = _clk()
 
         ubs: list[int] = []
         # ---- warm-up (§III-B) ----
@@ -280,6 +303,7 @@ class RoundSimulator:
             if idle >= cfg.lag_slots + rotation + 8:
                 break
         t_warm = st.slot
+        _t_warmup = _clk()
         failed_open = not st.warmup_done()
         t_warm_s = (engine.t if engine is not None
                     else t_warm * cfg.slot_seconds)
@@ -288,8 +312,13 @@ class RoundSimulator:
 
         # ---- vanilla BitTorrent (§III-A step 4) ----
         st.phase = "bt"
-        fluid = self.bt_mode == "fluid"
-        if fluid:
+        # warmup_only stops at the warm-up boundary (bench/scaling runs
+        # where only the scheduled phase is under measurement); the
+        # round result then reports the exact post-warm-up state.
+        fluid = self.bt_mode == "fluid" and not warmup_only
+        if warmup_only:
+            pass
+        elif fluid:
             eff_slots = run_bt_fluid(st, cfg.s_max - st.slot)
             if engine is not None:
                 # Fluid BT is count-space; its realized duration is the
@@ -315,6 +344,7 @@ class RoundSimulator:
                     # remaining reconstructable set (§III-E).
                     break
         t_round = st.slot
+        _t_bt = _clk()
         t_round_s = (engine.t if engine is not None
                      else t_round * cfg.slot_seconds)
 
@@ -353,6 +383,7 @@ class RoundSimulator:
             recon &= st.active[:, None]
 
         log = st.log.finalize(cfg.chunks_per_update, cfg.slot_seconds)
+        _t_emit = _clk()
         return RoundResult(
             metrics=m, log=log, reconstructable=recon,
             active=st.active.copy(), adj=self.adj, up=self.up,
@@ -364,9 +395,14 @@ class RoundSimulator:
                               data_s=engine.data_s,
                               n_solves=engine.n_solves)
                          if engine is not None else None),
+            timings={"spray_s": _t_spray - _t0,
+                     "warmup_s": _t_warmup - _t_spray,
+                     "bt_s": _t_bt - _t_warmup,
+                     "emit_s": _t_emit - _t_bt},
         )
 
 
 def simulate_round(cfg: SwarmConfig, collect_maxflow: bool = False,
-                   **kw) -> RoundResult:
-    return RoundSimulator(cfg, **kw).run(collect_maxflow=collect_maxflow)
+                   warmup_only: bool = False, **kw) -> RoundResult:
+    return RoundSimulator(cfg, **kw).run(collect_maxflow=collect_maxflow,
+                                         warmup_only=warmup_only)

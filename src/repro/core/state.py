@@ -103,9 +103,21 @@ class SwarmState:
         self.rng = rng
 
         C = cfg.total_chunks
-        self.have = np.zeros((n, C), dtype=bool)
+        # Eagerly fault the inventory in sequentially (wide stores via a
+        # uint64 view when the extent allows); lazily-mapped zeros would
+        # instead pay a first-touch page fault per scattered write in
+        # apply_transfers — tens of seconds at n >= 5000.
+        self.have = np.empty((n, C), dtype=bool)
+        flat = self.have.reshape(-1)
+        flat[: flat.size - flat.size % 8].view(np.uint64).fill(0)
+        flat[flat.size - flat.size % 8:] = False
         for v in range(n):
             self.have[v, v * K:(v + 1) * K] = True
+        # Log-replay invariant marker (see jit_engine._sync_have_dev):
+        # after construction, apply_transfers is the only writer of
+        # *this* array; schedulers seeing a different object (Byzantine
+        # claimed inventories) must repack from scratch.
+        self._have_pristine = self.have
         # Per-chunk replication count (rarity), maintained incrementally.
         self.replicas = np.ones(C, dtype=np.int64)
         # Non-owner chunks held per client (X_u in §IV-A).
@@ -235,7 +247,8 @@ class SwarmState:
 
         Replicated chunks (some non-owner holds them) plus the open
         owner windows of ungated active senders; optionally capped to
-        the ``cand_cap`` rarest for large-n runs.
+        ``cand_cap`` columns for large-n runs, stratified across
+        rarity bands so no replication level is starved.
         """
         cfg = self.cfg
         if self.phase == "bt" or not cfg.enable_gating:
@@ -246,12 +259,33 @@ class SwarmState:
         mask = self.replicas > 1
         ids, _, gated = self.owner_windows()
         ok = sactive & ~gated
-        if ok.any():
-            mask[ids[ok].ravel()] = True
+        mask[ids[ok].ravel()] = True
         cand = np.flatnonzero(mask)
         cap = cfg.cand_cap
-        if cap and cand.size > cap:
-            sel = np.argpartition(self.replicas[cand], cap - 1)[:cap]
+        if cap:
+            # Rarity-stratified cap (jit-clean, branchless): the rarest
+            # ``cap/2`` plus an even stride over the remaining
+            # candidates.  A pure rarest-first cap starves large swarms
+            # — the few holders of the rarest chunks saturate while the
+            # plentiful mid-rarity supply sits outside the cap — so the
+            # coverage half keeps every neighborhood servable.
+            # Sentinel-padding the rarity keys up to ``cap`` entries
+            # keeps argpartition legal for any cand size; when the cap
+            # does not bind, the halves tile all of cand and np.sort
+            # restores it exactly — schedules are unchanged either way.
+            half = cap // 2
+            pad = max(cap - cand.size, 0)
+            key = np.concatenate([self.replicas[cand],
+                                  np.full(pad, np.iinfo(np.int64).max)])
+            sel = np.argpartition(key, half - 1)[:half]
+            covered = np.zeros(key.size, dtype=bool)
+            covered[sel] = True
+            rest = np.flatnonzero(~covered)
+            take = cap - half
+            pos = (np.arange(take, dtype=np.int64)
+                   * rest.size) // max(take, 1)
+            sel = np.concatenate([sel, rest[pos]])
+            sel = sel[sel < cand.size]
             cand = np.sort(cand[sel])
         return cand
 

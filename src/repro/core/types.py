@@ -63,14 +63,19 @@ class SwarmConfig:
     scheduler: "str | SchedulerPolicy" = "greedy_fastest_first"
     # Slot-engine implementation: "batched" resolves the per-slot
     # assignment with vectorized budgeted rounds over all receivers at
-    # once (paper-scale swarms); "loop" is the reference per-receiver
-    # engine the batched one is equivalence-tested against.
+    # once (paper-scale swarms, default); "loop" is the reference
+    # per-receiver engine both others are equivalence-tested against;
+    # "jit" runs the same matching as fixed-shape jitted JAX kernels
+    # over packed uint32 bitplanes (core/jit_engine.py) for n>=~500
+    # scaling sweeps.  All three are legality- and parity-locked in
+    # tests/test_scheduler_equivalence.py.
     scheduler_impl: str = "batched"
     seed: int = 0
     # Large-n performance knob: cap the per-slot candidate-chunk set
-    # to the ``cand_cap`` rarest replicated chunks (0 = exact).  The
-    # per-slot budget (sum of downlinks) is far below the cap, so
-    # utilization is essentially unchanged (validated at n=100).
+    # to ``cand_cap`` chunks, stratified across rarity bands so every
+    # replication level stays represented (0 = exact).  The per-slot
+    # budget (sum of downlinks) is far below the cap, so utilization
+    # is essentially unchanged (validated at n=100).
     cand_cap: int = 0
 
     # ------------------------------------------------------------------

@@ -9,12 +9,20 @@ flows crossing a saturated link freeze at the current fill level, and
 the rest keep ramping.  The fixed point is the classic max-min fair
 allocation (no flow's rate can grow without shrinking a smaller one).
 
-Everything is vectorized over the active flow set: one water-filling
-solve is a handful of ``np.bincount`` passes (one per saturated-link
-group, at most ``O(#links)`` but typically a few), and the transport
-simulation re-solves only at flow-finish events, batched on a time
-quantum so the number of re-solves is bounded regardless of flow count
-— there is no per-event Python re-solve over individual flows.
+Both solvers run as fixed-shape jitted JAX kernels (float64 under a
+scoped ``enable_x64``): :func:`maxmin_rates` is one ``lax.while_loop``
+over freeze masks (one bottleneck level per pass, the same truncated
+feasible tail fill past ``max_passes``), and :func:`transport` stages
+the whole segment loop — nested water-fill solve, flow-death masking,
+quantum-batched finish events and per-chunk crossing emission over a
+padded chunk grid — in a single ``lax.while_loop`` whose carry replaces
+the host's ``while alive.any()``.  Flow and chunk extents pad to powers
+of two so re-solves across cycles hit a handful of compiled shapes; pad
+flows are dead on entry and pad chunk rows can never satisfy a crossing
+predicate, so padding never changes an allocation.  The pre-jax host
+implementations are kept verbatim (``_maxmin_host``/``_transport_host``)
+as the fallback when jax is absent; kernels mirror their exact IEEE
+operation order, so the two paths agree to rounding.
 
 Chunk-level completion instants come from the piecewise-linear
 delivered-bytes curve of each flow: chunks are pipelined back-to-back
@@ -23,12 +31,32 @@ over the flow (BitTorrent keeps a connection's pipe full), so chunk
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 
 import numpy as np
 
+try:                                    # same graceful degradation as
+    import jax                          # core.jit_engine: repro.net
+    import jax.numpy as jnp             # stays importable without jax
+    from jax import lax
+    from jax.experimental import enable_x64
+    _HAS_JAX = True
+except Exception:                       # pragma: no cover - env-specific
+    _HAS_JAX = False
+
 _EPS = 1e-9
 
+
+def _pow2(x) -> int:
+    """Smallest power of two >= x (>= 1): static kernel extents."""
+    x = int(x)
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# max-min progressive filling
+# ---------------------------------------------------------------------------
 
 def maxmin_rates(src: np.ndarray, dst: np.ndarray,
                  up: np.ndarray, down: np.ndarray,
@@ -47,14 +75,21 @@ def maxmin_rates(src: np.ndarray, dst: np.ndarray,
     whenever one pass would have finished anyway.  Small stages and the
     homogeneous limit are always exact.
     """
-    src = np.asarray(src, np.int64)
-    dst = np.asarray(dst, np.int64)
-    f = src.size
-    if f == 0:
+    if len(src) == 0:
         return np.zeros(0, np.float64)
+    s = np.asarray(src, np.int64)
+    d = np.asarray(dst, np.int64)
+    u = np.asarray(up, np.float64)
+    w = np.asarray(down, np.float64)
+    if _HAS_JAX:
+        return _maxmin_jax(s, d, u, w, max_passes)
+    return _maxmin_host(s, d, u, w, max_passes)
+
+
+def _maxmin_host(src, dst, up, down, max_passes):
+    """Host progressive filling (pre-jax reference / no-jax fallback)."""
+    f = src.size
     n = len(up)
-    up = np.asarray(up, np.float64)
-    down = np.asarray(down, np.float64)
     cap_up = up.copy()
     cap_down = down.copy()
     rates = np.zeros(f, np.float64)
@@ -96,6 +131,83 @@ def maxmin_rates(src: np.ndarray, dst: np.ndarray,
         rates[unfrozen] = fill + np.maximum(share[unfrozen], 0.0)
     return rates
 
+
+def _maxmin_fill(src, dst, up, down, unfrozen0, max_passes: int):
+    """Traced progressive filling over a fixed flow extent.
+
+    The staged twin of :func:`_maxmin_host`: one ``lax.while_loop``
+    iteration per bottleneck level, freeze masks in place of boolean
+    indexing, the same stall guard and truncated feasible tail.  Also
+    inlined per segment by the transport kernel.
+    """
+    n = up.shape[0]
+    f_pad = src.shape[0]
+    slack_u = _EPS * jnp.maximum(up, 1.0)
+    slack_d = _EPS * jnp.maximum(down, 1.0)
+
+    def counts(unfrozen):
+        w = jnp.where(unfrozen, 1.0, 0.0)
+        nu = jnp.zeros(n, jnp.float64).at[src].add(w)
+        nd = jnp.zeros(n, jnp.float64).at[dst].add(w)
+        return nu, nd
+
+    def cond(c):
+        i, unfrozen = c[0], c[1]
+        return (i < max_passes) & jnp.any(unfrozen)
+
+    def body(c):
+        i, unfrozen, cap_up, cap_down, rates, fill = c
+        nu, nd = counts(unfrozen)
+        tu = jnp.where(nu > 0, cap_up / nu, jnp.inf)
+        td = jnp.where(nd > 0, cap_down / nd, jnp.inf)
+        t = jnp.minimum(jnp.min(tu), jnp.min(td))
+        fill = fill + t
+        cap_up = cap_up - t * nu
+        cap_down = cap_down - t * nd
+        sat_u = (nu > 0) & (cap_up <= slack_u)
+        sat_d = (nd > 0) & (cap_down <= slack_d)
+        freeze = unfrozen & (sat_u[src] | sat_d[dst])
+        freeze = jnp.where(jnp.any(freeze), freeze, unfrozen)
+        rates = jnp.where(freeze, fill, rates)
+        return (i + 1, unfrozen & ~freeze, cap_up, cap_down, rates, fill)
+
+    init = (jnp.int32(0), unfrozen0, up, down,
+            jnp.zeros(f_pad, jnp.float64), jnp.float64(0.0))
+    _, unfrozen, cap_up, cap_down, rates, fill = lax.while_loop(
+        cond, body, init)
+    nu, nd = counts(unfrozen)
+    su = jnp.where(nu > 0, cap_up / nu, jnp.inf)
+    sd = jnp.where(nd > 0, cap_down / nd, jnp.inf)
+    share = jnp.minimum(su[src], sd[dst])
+    return jnp.where(unfrozen, fill + jnp.maximum(share, 0.0), rates)
+
+
+@functools.lru_cache(maxsize=None)
+def _maxmin_compiled(n: int, f_pad: int, max_passes: int):
+    def kern(src, dst, up, down, valid):
+        unfrozen0 = valid & (up[src] > _EPS) & (down[dst] > _EPS)
+        return _maxmin_fill(src, dst, up, down, unfrozen0, max_passes)
+    return jax.jit(kern)
+
+
+def _maxmin_jax(src, dst, up, down, max_passes):
+    f = len(src)
+    f_pad = _pow2(f)
+    sp = np.zeros(f_pad, np.int64)
+    dp = np.zeros(f_pad, np.int64)
+    sp[:f] = src
+    dp[:f] = dst
+    valid = np.zeros(f_pad, bool)
+    valid[:f] = True
+    with enable_x64():
+        r = _maxmin_compiled(len(up), f_pad, int(max_passes))(
+            sp, dp, up, down, valid)
+        return np.asarray(r)[:f]
+
+
+# ---------------------------------------------------------------------------
+# chunked transport
+# ---------------------------------------------------------------------------
 
 @dataclass
 class FlowTimings:
@@ -171,23 +283,34 @@ def transport(src: np.ndarray, dst: np.ndarray, counts: np.ndarray,
     capacity waits for the segment boundary.  ``quantum_frac=0`` gives
     the exact per-event progressive-filling process.
     """
-    src = np.asarray(src, np.int64)
-    dst = np.asarray(dst, np.int64)
-    counts = np.asarray(counts, np.int64)
-    f = src.size
-    if f == 0:
+    if len(src) == 0:
         return FlowTimings(np.zeros(0), np.zeros(0, np.int64),
                            np.zeros(0), 0.0, 0)
-    nbytes = counts.astype(np.float64) * float(chunk_bytes)
+    s = np.asarray(src, np.int64)
+    d = np.asarray(dst, np.int64)
+    c = np.asarray(counts, np.int64)
+    u = np.asarray(up, np.float64)
+    w = np.asarray(down, np.float64)
+    nbytes = c.astype(np.float64) * float(chunk_bytes)
+    # Congestion lower bound on the makespan: the busiest access link.
+    lb = congestion_bound(s, d, nbytes, u, w)
+    quantum = quantum_frac * lb
+    if _HAS_JAX:
+        return _transport_jax(s, d, c, nbytes,
+                              float(chunk_bytes), u, w, quantum)
+    return _transport_host(s, d, c, nbytes,
+                           float(chunk_bytes), u, w, quantum)
+
+
+def _transport_host(src, dst, counts, nbytes, chunk_bytes, up, down,
+                    quantum):
+    """Host segment loop (pre-jax reference / no-jax fallback)."""
+    f = src.size
     rem = nbytes.copy()
     delivered = np.zeros(f, np.float64)
     finish = np.full(f, np.inf, np.float64)
     alive = rem > 0
     finish[~alive] = 0.0
-
-    # Congestion lower bound on the makespan: the busiest access link.
-    lb = congestion_bound(src, dst, nbytes, up, down)
-    quantum = quantum_frac * lb
 
     cf_parts: list[np.ndarray] = []
     ce_parts: list[np.ndarray] = []
@@ -248,4 +371,103 @@ def transport(src: np.ndarray, dst: np.ndarray, counts: np.ndarray,
     makespan = float(fin.max(initial=0.0))
     return FlowTimings(finish=finish, chunk_flow=chunk_flow,
                        chunk_end=chunk_end, makespan=makespan,
+                       n_solves=n_solves)
+
+
+@functools.lru_cache(maxsize=None)
+def _transport_compiled(n: int, f_pad: int, m_pad: int,
+                        max_passes: int):
+    """Whole-segment-loop transport kernel over fixed extents.
+
+    Carries the host loop's entire mutable state — wall clock, per-flow
+    residual bytes, delivered curve, finish instants, alive mask, the
+    padded per-chunk completion grid and the solve counter — through
+    one ``lax.while_loop``.  Chunk rows record a completion instant the
+    segment their 1-based rank is crossed by the flow's delivered-bytes
+    curve; rows never crossed (dead flows, padding) stay ``inf`` and
+    are dropped at the host boundary, reproducing the host path's
+    emit-on-cross behaviour exactly.
+    """
+
+    def kern(src, dst, counts_f, nbytes, cb, up, down, quantum,
+             c_flow, c_rank):
+
+        def cond(carry):
+            return jnp.any(carry[4])
+
+        def body(carry):
+            t, rem, delivered, finish, alive, cend, nsol = carry
+            unfrozen0 = (alive & (up[src] > _EPS)
+                         & (down[dst] > _EPS))
+            r = _maxmin_fill(src, dst, up, down, unfrozen0, max_passes)
+            nsol = nsol + 1
+            live = alive & (r > _EPS)       # dead: no capacity, ever
+            ttf = jnp.where(live, rem / jnp.where(live, r, 1.0),
+                            jnp.inf)
+            tmin = jnp.min(ttf)
+            dt = jnp.where(jnp.isfinite(tmin),
+                           jnp.maximum(tmin, quantum), 0.0)
+            adv = jnp.where(live, jnp.minimum(r * dt, rem), 0.0)
+            old = delivered
+            new = old + adv
+            k0 = jnp.floor(old / cb + _EPS).astype(jnp.int64)
+            k1 = jnp.minimum(jnp.floor(new / cb + _EPS),
+                             counts_f).astype(jnp.int64)
+            crossed = (c_rank > k0[c_flow]) & (c_rank <= k1[c_flow])
+            endv = t + (c_rank.astype(jnp.float64) * cb
+                        - old[c_flow]) / jnp.where(
+                            crossed, r[c_flow], 1.0)
+            cend = jnp.where(crossed, endv, cend)
+            rem = rem - adv
+            done = live & (rem <= _EPS * cb)
+            finish = jnp.where(done, t + ttf, finish)
+            return (t + dt, rem, new, finish, live & ~done, cend, nsol)
+
+        alive0 = nbytes > 0
+        init = (jnp.float64(0.0), nbytes,
+                jnp.zeros(f_pad, jnp.float64),
+                jnp.where(alive0, jnp.inf, 0.0), alive0,
+                jnp.full(m_pad, jnp.inf, jnp.float64), jnp.int32(0))
+        out = lax.while_loop(cond, body, init)
+        return out[3], out[5], out[6]
+
+    return jax.jit(kern)
+
+
+def _transport_jax(src, dst, counts, nbytes, chunk_bytes, up, down,
+                   quantum):
+    f = len(src)
+    f_pad = _pow2(f)
+    total = int(counts.sum())
+    m_pad = _pow2(max(total, 1))
+    sp = np.zeros(f_pad, np.int64)
+    dp = np.zeros(f_pad, np.int64)
+    cp = np.zeros(f_pad, np.float64)     # counts as float: k1 clamp
+    bp = np.zeros(f_pad, np.float64)
+    sp[:f] = src
+    dp[:f] = dst
+    cp[:f] = counts
+    bp[:f] = nbytes
+    # Chunk grid in (flow, rank) order — precisely the host path's
+    # final lexsort((chunk_end, chunk_flow)) order, because ends are
+    # strictly increasing with rank inside a flow.
+    c_flow = np.zeros(m_pad, np.int64)
+    c_rank = np.zeros(m_pad, np.int64)   # rank 0 pads can never cross
+    c_flow[:total] = np.repeat(np.arange(f, dtype=np.int64), counts)
+    c_rank[:total] = (np.arange(total, dtype=np.int64)
+                      - np.repeat(np.cumsum(counts) - counts, counts)
+                      + 1)
+    with enable_x64():
+        fin_d, cend_d, nsol_d = _transport_compiled(
+            len(up), f_pad, m_pad, 16)(
+                sp, dp, cp, bp, np.float64(chunk_bytes), up, down,
+                np.float64(quantum), c_flow, c_rank)
+        finish = np.asarray(fin_d)[:f]
+        cend = np.asarray(cend_d)[:total]
+        n_solves = int(np.asarray(nsol_d))
+    emitted = np.isfinite(cend)
+    fin = finish[np.isfinite(finish)]
+    return FlowTimings(finish=finish, chunk_flow=c_flow[:total][emitted],
+                       chunk_end=cend[emitted],
+                       makespan=float(fin.max(initial=0.0)),
                        n_solves=n_solves)

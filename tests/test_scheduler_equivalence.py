@@ -1,19 +1,22 @@
-"""Loop-vs-batched slot-engine equivalence (tentpole invariants).
+"""Slot-engine equivalence across loop, batched and jit (tentpole
+invariants).
 
-The batched engine must schedule *legally* — per-slot uplink/downlink
+Every engine must schedule *legally* — per-slot uplink/downlink
 budgets, tau concurrency, adjacency, duplicate-free delivery, cover-set
-gating (Eq. 1) — and match the reference loop engine's *aggregate*
+gating (Eq. 1) — and the three engines must match in *aggregate*
 throughput (t_warm, utilization) within tolerance, across every
-scheduler mode.  Exact per-transfer equality is not required (the two
-engines consume randomness differently); legality plus aggregate parity
-is the contract.
+scheduler mode.  Exact per-transfer equality across engines is not
+required (each consumes randomness differently); legality plus
+aggregate parity is the contract.  Within one engine, a fixed seed must
+replay a byte-identical trace (the determinism twins below pin this for
+the jit engine under ``SwarmSession`` on both time engines).
 """
 from collections import Counter
 
 import numpy as np
 import pytest
 
-from repro.core import SwarmConfig, simulate_round
+from repro.core import SwarmConfig, SwarmSession, simulate_round
 from repro.core import privacy
 
 MODES = ["random_fifo", "random_fastest_first", "greedy_fastest_first",
@@ -93,6 +96,69 @@ def test_aggregate_parity(mode, seed):
     assert abs(rb.t_warm - rl.t_warm) <= max(3, 0.6 * rl.t_warm)
     assert abs(rb.warmup_utilization - rl.warmup_utilization) <= 0.2
     assert abs(rb.t_round - rl.t_round) <= max(5, 0.35 * rl.t_round)
+
+
+# ---------------------------------------------------------------------------
+# jit engine: legality, Eq. 1, three-way parity, determinism twins
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("seed", [1, 9])
+def test_jit_schedules_legally(mode, seed):
+    cfg = _cfg(mode, seed, "jit")
+    res = simulate_round(cfg)
+    _replay_legality(cfg, res, check_tau=mode in CENTRALIZED)
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_jit_satisfies_eq1(mode):
+    """Gating cap Eq. (1) holds on every jit-engine warm-up send."""
+    cfg = _cfg(mode, 3, "jit")
+    res = simulate_round(cfg)
+    assert privacy.check_eq1(res.log, cfg.owner_throttle, cfg.k_gate)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("seed", [1, 9])
+def test_three_way_aggregate_parity(mode, seed):
+    """jit tracks both host engines within the loop-vs-batched bands."""
+    rl = simulate_round(_cfg(mode, seed, "loop")).metrics
+    rj = simulate_round(_cfg(mode, seed, "jit")).metrics
+    assert not rj.failed_open
+    assert abs(rj.t_warm - rl.t_warm) <= max(3, 0.6 * rl.t_warm)
+    assert abs(rj.warmup_utilization - rl.warmup_utilization) <= 0.2
+    assert abs(rj.t_round - rl.t_round) <= max(5, 0.35 * rl.t_round)
+    rb = simulate_round(_cfg(mode, seed, "batched")).metrics
+    assert abs(rj.t_warm - rb.t_warm) <= max(3, 0.6 * rb.t_warm)
+    assert abs(rj.warmup_utilization - rb.warmup_utilization) <= 0.2
+
+
+def _session_traces(time_engine):
+    cfg = SwarmConfig(n=20, chunks_per_update=16, min_degree=5,
+                      s_max=4000, seed=7, scheduler_impl="jit")
+    kw = {}
+    if time_engine == "event":
+        from repro.net import NetConfig
+        kw = dict(time_engine="event",
+                  net=NetConfig(tracker_rtt_s=0.05))
+    ses = SwarmSession(cfg, churn_rate=0.1, **kw)
+    ses.run(2)
+    return ses.trace()
+
+
+@pytest.mark.parametrize("time_engine", ["slot", "event"])
+def test_jit_determinism_twin(time_engine):
+    """A fixed seed replays a byte-identical multi-round TransferTrace
+    under SwarmSession on both time engines: the jit engine draws
+    exactly two host rng values per slot and keys its kernel noise from
+    the second, so schedules cannot depend on device iteration order."""
+    a = _session_traces(time_engine)
+    b = _session_traces(time_engine)
+    for key in ("slot", "sender", "receiver", "chunk", "owner",
+                "b_size", "o_size", "phase"):
+        assert np.array_equal(a[key], b[key]), (time_engine, key)
+    assert np.array_equal(a.t_start, b.t_start)
+    assert np.array_equal(a.t_end, b.t_end)
 
 
 def test_aggregate_parity_paper_scale_warm():
