@@ -123,7 +123,12 @@ def engine_point(n: int, impl: str) -> dict:
         "failed_open": m.failed_open,
         "warmup_utilization": round(m.warmup_utilization, 4),
         "total_s": round(total_s, 2),
-        "setup_s": round(setup_s, 2),        # state alloc + overlay
+        # state alloc + overlay.  Setup and spray used to dominate the
+        # large-n sweep points via quadratic python-loop fills (n=5000:
+        # setup 30.5s, spray 2.7s); the vectorized fill/spray paths
+        # hold them near-flat (~3s / ~1.2s at the same point), so the
+        # sweep now times the engines, not the harness.
+        "setup_s": round(setup_s, 2),
         "phases": {
             "spray_s": round(tm["spray_s"], 2),
             "warmup_s": round(tm["warmup_s"], 2),

@@ -20,14 +20,16 @@ def main(argv=None):
     args = ap.parse_args(argv)
     fast = not args.full
 
-    from . import (bench_analysis, bench_attacks, bench_net,
-                   bench_session, fig3_utilization, fig4_decomposition,
-                   fig5_threshold, fig6_7_asr, fig8_llm_scale, roofline,
-                   table2_learning, table3_scaling)
+    from . import (bench_analysis, bench_async, bench_attacks,
+                   bench_net, bench_session, fig3_utilization,
+                   fig4_decomposition, fig5_threshold, fig6_7_asr,
+                   fig8_llm_scale, roofline, table2_learning,
+                   table3_scaling)
 
     suite = {
         "analysis": lambda: bench_analysis.run(fast=fast),
         "table2": lambda: table2_learning.run(fast=fast),
+        "async": lambda: bench_async.run(fast=fast),
         "session": lambda: bench_session.run(fast=fast),
         "attacks": lambda: bench_attacks.run(fast=fast),
         "net": lambda: bench_net.run(fast=fast),

@@ -59,6 +59,52 @@ def compression_error_sweep(rounds=(1, 2, 4, 8, 16), n_pods: int = 8,
     return rows, bound_ok
 
 
+def async_frontier(fast: bool = False):
+    """Async-vs-sync accuracy/wall-clock frontier (fl/asyncfl.py).
+
+    Each ``round_slots`` budget is one operating point on the
+    deadline -> latency/staleness trade-off curve: a tighter cut lowers
+    wall clock per round while the carried tail merges late at
+    staleness >= 1.  Under heavy-tailed uplinks the whole async branch
+    sits left of the sync point at equal accuracy; BENCH_async.json
+    holds the full time-to-target analysis."""
+    from repro.core.capacities import MBPS, StragglerLinkModel
+    from repro.fl.asyncfl import AsyncConfig, run_async_experiment
+    from repro.net.engine import RESIDENTIAL_NET
+
+    slow = StragglerLinkModel(
+        up_lo=15.5 * MBPS, up_hi=25.3 * MBPS,
+        down_lo=36.5 * MBPS, down_hi=121.0 * MBPS,
+        straggler_frac=0.08, up_slowdown=32.0)
+    base = dict(time_engine="event", net=RESIDENTIAL_NET,
+                link_model=slow, evolve_overlay=True)
+    cfg = FLConfig(dataset="synth-mnist", dist="dir0.1", n_clients=16,
+                   rounds=8 if fast else 12, min_degree=5,
+                   n_train=3000, n_test=800, seed=0,
+                   local=LocalSpec(epochs=1, lr=0.001))
+    sync = run_async_experiment(cfg, AsyncConfig(**base))
+    pts = [{"mode": "sync", "round_slots": None,
+            "wall_s": round(sync.wall_s[-1], 1),
+            "acc": round(float(np.mean(sync.accuracy[-3:])), 4)}]
+    print("\nasync frontier (straggler links, n=16/K=4, "
+          f"{cfg.rounds} rounds):")
+    print(f"  sync           wall={pts[0]['wall_s']:7.1f}s "
+          f"acc={pts[0]['acc']:.3f}")
+    for bud in ((6, 8) if fast else (5, 6, 7, 9)):
+        asy = run_async_experiment(cfg, AsyncConfig(
+            buffer_k=4, max_staleness=3, overlap=True,
+            round_slots=bud, **base))
+        pts.append({"mode": "async", "round_slots": bud,
+                    "wall_s": round(asy.wall_s[-1], 1),
+                    "acc": round(float(np.mean(asy.accuracy[-3:])), 4),
+                    "staleness_hist": asy.staleness_hist,
+                    "dropped": asy.dropped})
+        print(f"  round_slots={bud:2d} wall={pts[-1]['wall_s']:7.1f}s "
+              f"acc={pts[-1]['acc']:.3f} "
+              f"stale={asy.staleness_hist} dropped={asy.dropped}")
+    return pts
+
+
 def run(fast: bool = False):
     banner("Table II — CFL vs GossipDFL vs FLTorrent")
     n_clients = 10 if fast else 20
@@ -92,9 +138,11 @@ def run(fast: bool = False):
           f"{'CONFIRMED' if ok else 'VIOLATED'}")
     comp_rows, comp_ok = compression_error_sweep(
         rounds=(1, 2, 4, 8) if fast else (1, 2, 4, 8, 16, 32))
+    frontier = async_frontier(fast)
     save("table2_learning", {"rows": rows, "pattern_ok": ok,
                              "compression_sweep": comp_rows,
-                             "compression_bound_ok": comp_ok})
+                             "compression_bound_ok": comp_ok,
+                             "async_frontier": frontier})
     return rows
 
 

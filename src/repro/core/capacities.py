@@ -107,10 +107,52 @@ class LinkModel:
                               warn=warn)
 
 
+@dataclass(frozen=True)
+class StragglerLinkModel(LinkModel):
+    """A :class:`LinkModel` with a slow-link straggler cohort.
+
+    A ``straggler_frac`` Bernoulli subset of clients gets its uplink
+    divided by ``up_slowdown`` (and downlink by ``down_slowdown``) —
+    the bursty-residential regime where a few peers seed their update
+    orders of magnitude slower than the swarm disseminates everyone
+    else's.  Under synchronous deadlines these peers gate every round;
+    under the async runner (fl/asyncfl.py) they deliver late and are
+    down-weighted instead.
+
+    Draw-order contract: the base draws come FIRST (identical to the
+    parent model at the same seed), the straggler coin flips AFTER — so
+    swapping a model for its straggler variant perturbs no downstream
+    stream, and the non-straggler cohort keeps its exact base rates.
+    """
+
+    straggler_frac: float = 0.25
+    up_slowdown: float = 8.0
+    down_slowdown: float = 1.0
+
+    def sample_rates(
+        self,
+        n: int,
+        rng: np.random.Generator,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        up, down = super().sample_rates(n, rng)
+        slow = rng.random(n) < self.straggler_frac
+        return (np.where(slow, up / self.up_slowdown, up),
+                np.where(slow, down / self.down_slowdown, down))
+
+
 # Paper defaults -------------------------------------------------------
 RESIDENTIAL = LinkModel(
     up_lo=15.5 * MBPS, up_hi=25.3 * MBPS,
     down_lo=36.5 * MBPS, down_hi=121.0 * MBPS,
+)
+
+# Straggler-heavy residential: a quarter of the peers seed at 1/8 the
+# uplink (asymmetric — upload is the scarce residential direction).
+# The regime the async frontier (benchmarks/bench_async.py) measures.
+RESIDENTIAL_STRAGGLER = StragglerLinkModel(
+    up_lo=15.5 * MBPS, up_hi=25.3 * MBPS,
+    down_lo=36.5 * MBPS, down_hi=121.0 * MBPS,
+    straggler_frac=0.25, up_slowdown=8.0,
 )
 
 DATACENTER = LinkModel(      # LLM-scale stress tests (§V-E): 7-10 Gbps

@@ -57,6 +57,27 @@ from .trace import TransferTrace
 from .types import SwarmConfig
 
 
+def _locate(ids: np.ndarray, g: np.ndarray):
+    """Global -> local positions over the sorted active-id array;
+    returns (positions, present-mask)."""
+    g = np.asarray(g, np.int64)
+    pos = np.searchsorted(ids, g)
+    posc = np.minimum(pos, max(ids.size - 1, 0))
+    ok = (pos < ids.size) & (ids.size > 0)
+    if ids.size:
+        ok &= ids[posc] == g
+    return posc.astype(np.int64), ok
+
+
+def _group_counts(gen: np.ndarray, owner: np.ndarray):
+    """Yield (gen, owner, count) per distinct (generation, owner) pair."""
+    key = np.asarray(gen, np.int64) * (2 ** 32) + np.asarray(owner,
+                                                             np.int64)
+    uk, cnt = np.unique(key, return_counts=True)
+    for k, c in zip(uk, cnt):
+        yield int(k >> 32), int(k & 0xFFFFFFFF), int(c)
+
+
 @dataclass(frozen=True)
 class ChurnModel:
     """Cross-round membership dynamics (paper §III-E).
@@ -248,6 +269,11 @@ class SessionRound:
     dropped_midround: np.ndarray = field(
         default_factory=lambda: np.zeros(0, np.int64))
     spray_plan: SprayPlan | None = None
+    # Async deliveries (fl/asyncfl.py; empty on sync rounds):
+    late_log: TransferTrace | None = None   # late rows, global ids
+    drain_s: float = 0.0                    # boundary drain wall time
+    late_ready: list = field(default_factory=list)   # (gen, owner) done
+    dead_updates: list = field(default_factory=list)  # (gen, owner) lost
 
     @property
     def t_warm_s(self) -> float:
@@ -270,6 +296,7 @@ class SessionRound:
         is the cross-round clock)."""
         tr = self.result.log
         ids = self.active_ids
+        n = len(tr)
         return TransferTrace(
             K=tr.K,
             slot=tr.slot,
@@ -279,8 +306,12 @@ class SessionRound:
             chunk=tr.chunk,
             owner=ids[np.asarray(tr.owner, np.int64)].astype(np.int32),
             b_size=tr.b_size, o_size=tr.o_size, phase=tr.phase,
-            round=np.full(len(tr), self.round_idx, dtype=np.int32),
-            t_start=tr.t_start, t_end=tr.t_end)
+            round=np.full(n, self.round_idx, dtype=np.int32),
+            t_start=tr.t_start, t_end=tr.t_end,
+            # A round's own rows always carry its own generation, on
+            # time; late deliveries live in ``late_log``.
+            generation=np.full(n, self.round_idx, dtype=np.int32),
+            staleness=np.zeros(n, dtype=np.int32))
 
 
 class SwarmSession:
@@ -347,6 +378,19 @@ class SwarmSession:
         self.round_idx = 0
         self.history: list[SessionRound] = []
         self._pending: tuple | None = None   # begun-but-not-run round
+        # Async state (fl/asyncfl.py): wall-clock start of each round
+        # (offsets[r] -> round r; a trailing entry marks the session
+        # end), the carry-mode backlog of undelivered tail transfers
+        # (global-id arrays), and per-(gen, owner) outstanding-chunk
+        # counts for late-completion bookkeeping.
+        self.offsets: list[float] = [0.0]
+        self._backlog: dict | None = None
+        self._outstanding: dict[tuple[int, int], int] = {}
+        # Relay-replan state (carry mode): (gen, chunk) -> global ids of
+        # peers holding that chunk (grown by background deliveries), and
+        # (gen, owner) -> that update's outstanding chunk ids (for GC).
+        self._holders: dict[tuple[int, int], np.ndarray] = {}
+        self._update_chunks: dict[tuple[int, int], np.ndarray] = {}
 
         if self.evolve:
             self.adj = random_overlay(cfg.n, cfg.min_degree,
@@ -536,11 +580,27 @@ class SwarmSession:
 
     def run_round(self, *, dropouts: dict | None = None,
                   byzantine=None,
-                  collect_maxflow: bool = False) -> SessionRound:
-        """Run the dissemination round begun by :meth:`begin_round`."""
+                  collect_maxflow: bool = False,
+                  quorum_k: int | None = None,
+                  tail_mode: str = "none",
+                  bt_budget: int | None = None) -> SessionRound:
+        """Run the dissemination round begun by :meth:`begin_round`.
+
+        ``quorum_k``/``tail_mode``/``bt_budget`` are the async hooks
+        (fl/asyncfl.py): a FedBuff quorum cuts the BT phase once
+        ``quorum_k`` updates are swarm-complete (or after ``bt_budget``
+        directive cycles — the deadline whose *masking* the async
+        runner removes), and the undelivered tail is either drained at
+        the boundary (``"drain"``, serialized wall clock) or carried as
+        background flows into the NEXT round's event engine
+        (``"carry"``, overlapped dissemination).  The defaults leave the
+        sync path byte-identical.
+        """
         self.begin_round()
         r, ids, joined, left, rejoined, plan = self._pending
         self._pending = None
+        background, bmeta, dead_updates = self._map_backlog(r, ids,
+                                                            tail_mode)
         cfg_r = self.cfg.replace(n=int(ids.size),
                                  seed=int(self.round_seed(r)))
         if self.evolve:
@@ -552,7 +612,7 @@ class SwarmSession:
                 up_bps=self.up_bps[ids], down_bps=self.down_bps[ids],
                 rng=np.random.default_rng(cfg_r.seed),
                 spray_plan=plan, time_engine=self.time_engine,
-                net=self.net)
+                net=self.net, background=background)
             self._exposure[np.ix_(ids, ids)] += sub_adj
         else:
             # Back-compat path: bit-identical to the historical
@@ -561,8 +621,10 @@ class SwarmSession:
                                  dropouts=dropouts, byzantine=byzantine,
                                  bt_mode=self.bt_mode, spray_plan=plan,
                                  time_engine=self.time_engine,
-                                 net=self.net)
-        res = sim.run(collect_maxflow=collect_maxflow)
+                                 net=self.net, background=background)
+        res = sim.run(collect_maxflow=collect_maxflow,
+                      quorum_k=quorum_k, tail_mode=tail_mode,
+                      bt_budget=bt_budget)
 
         dropped = ids[~res.active]
         if self.evolve and dropped.size:
@@ -574,22 +636,267 @@ class SwarmSession:
                     dropped.size)
         rec = SessionRound(round_idx=r, active_ids=ids, result=res,
                            joined=joined, left=left, rejoined=rejoined,
-                           dropped_midround=dropped, spray_plan=plan)
+                           dropped_midround=dropped, spray_plan=plan,
+                           drain_s=res.drain_s)
+        rec.dead_updates.extend(dead_updates)
+        self._settle_async(rec, r, ids, res, bmeta, tail_mode)
+        self.offsets.append(self.offsets[-1] + res.metrics.t_round_s
+                            + res.drain_s)
         self.history.append(rec)
         self.round_idx += 1
         return rec
+
+    # -- async tail bookkeeping (fl/asyncfl.py) ---------------------------
+    def _map_backlog(self, r: int, ids: np.ndarray, tail_mode: str):
+        """Re-key the carry backlog from global ids to round-``r`` local
+        ids and RE-PLAN every row's sender from the current holder set.
+
+        A row whose RECEIVER departed is no longer needed (the absent
+        peer re-syncs via the FL catch-up path on rejoin).  Senders are
+        not fixed at extraction: each boundary every surviving row gets
+        the least-loaded ACTIVE holder of its chunk — background
+        deliveries grow the holder sets (:meth:`_settle_async`), so a
+        chunk seeded once relays through fast peers in later rounds
+        (exponential spread) instead of fanning out of its original
+        holder forever.  An update none of whose holders remain active
+        is dead and reported."""
+        if tail_mode != "carry" or self._backlog is None:
+            return None, None, []
+        b = self._backlog
+        self._backlog = None
+        lr, r_ok = _locate(ids, b["rcv"])
+        # Receiver-departed entries shrink the outstanding counts: the
+        # update completes over the peers still active.
+        for g, o in zip(b["gen"][~r_ok], b["owner"][~r_ok]):
+            key = (int(g), int(o))
+            if key in self._outstanding:
+                self._outstanding[key] -= 1
+        keep = r_ok.copy()
+        snd_local = np.zeros(len(keep), np.int64)
+        # Per-holder service-time estimate: queued rows / uplink rate.
+        # Without the rate term a straggler uplink (32x slower) draws
+        # the same share of rows as a fast peer and every update strands
+        # a few rows behind it for an extra round.
+        if self.up_bps is not None:
+            inv_up = {int(v): 1.0 / float(self.up_bps[g])
+                      for v, g in enumerate(ids)}
+        else:
+            inv_up = None
+        load: dict[int, int] = {}
+        hcache: dict[tuple[int, int], np.ndarray] = {}
+        dead_set: set[tuple[int, int]] = set()
+        for i in np.flatnonzero(keep):
+            ckey = (int(b["gen"][i]), int(b["chunk"][i]))
+            hs = hcache.get(ckey)
+            if hs is None:
+                hg = self._holders.get(ckey)
+                if hg is None:
+                    hs = np.zeros(0, np.int64)
+                else:
+                    lp, ok = _locate(ids, hg)
+                    hs = lp[ok]
+                hcache[ckey] = hs
+            if hs.size == 0:
+                dead_set.add((int(b["gen"][i]), int(b["owner"][i])))
+                keep[i] = False
+                continue
+            # Least-finish-time active holder, ties to the lowest local
+            # id — deterministic, and balances scarce-chunk fan-out
+            # across the holder set as it grows.
+            if inv_up is not None:
+                best = int(min(hs, key=lambda v: (
+                    (load.get(int(v), 0) + 1) * inv_up[int(v)], int(v))))
+            else:
+                best = int(min(hs, key=lambda v: (load.get(int(v), 0),
+                                                  int(v))))
+            load[best] = load.get(best, 0) + 1
+            snd_local[i] = best
+        dead = []
+        if dead_set:
+            for i in np.flatnonzero(keep):
+                if (int(b["gen"][i]), int(b["owner"][i])) in dead_set:
+                    keep[i] = False
+            for key in dead_set:
+                if self._outstanding.pop(key, None) is not None:
+                    dead.append(key)
+                self._gc_update(key)
+        if not keep.any():
+            return None, None, dead
+        bmeta = {k: v[keep] for k, v in b.items()}
+        bmeta["snd"] = ids[snd_local[keep]]
+        # Queue order is delivery priority (per-flow pipelines follow
+        # it): oldest generation first, then OWNER-MAJOR within a
+        # generation — completing one update everywhere before starting
+        # the next turns "87% of every update delivered" (zero merges)
+        # into "87% of updates delivered completely" (staleness-1
+        # merges).
+        order = np.lexsort((bmeta["chunk"], bmeta["owner"],
+                            bmeta["gen"]))
+        bmeta = {k: v[order] for k, v in bmeta.items()}
+        background = (snd_local[keep][order], lr[keep][order],
+                      np.arange(order.size, dtype=np.int64))
+        return background, bmeta, dead
+
+    def _gc_update(self, key: tuple[int, int]):
+        """Drop the holder-tracking state of a finished/dead update."""
+        gen = key[0]
+        for c in np.asarray(self._update_chunks.pop(key, ()), np.int64):
+            self._holders.pop((gen, int(c)), None)
+
+    def _settle_async(self, rec: SessionRound, r: int, ids: np.ndarray,
+                      res: RoundResult, bmeta: dict | None,
+                      tail_mode: str):
+        """Assemble the round's late-delivery trace, update outstanding
+        counts, queue the fresh tail, and mark newly-complete updates."""
+        K = self.cfg.chunks_per_update
+        delivered: list[tuple[int, int]] = []
+        if tail_mode == "drain" and res.late is not None:
+            la = res.late
+            n = len(la["snd"])
+            gen = np.full(n, r, dtype=np.int32)
+            # Boundary-drain rows belong to the NEXT round's timeline at
+            # negative offsets: wall time = offsets[r+1] + t, with
+            # t in [-drain_s, 0] — strictly before round r+1's own rows.
+            rec.late_log = TransferTrace.from_arrays(
+                K=K, slot=la["slot"].astype(np.int32),
+                sender=ids[la["snd"]].astype(np.int32),
+                receiver=ids[la["rcv"]].astype(np.int32),
+                chunk=la["chunk"],
+                owner=ids[la["chunk"] // K].astype(np.int32),
+                b_size=np.zeros(n, np.int64), o_size=np.zeros(n, np.int64),
+                phase=np.full(n, 2, dtype=np.int8),
+                round=np.full(n, r + 1, dtype=np.int32),
+                t_start=la["t_start"] - res.drain_s,
+                t_end=la["t_end"] - res.drain_s,
+                generation=gen, staleness=np.ones(n, dtype=np.int32))
+            delivered = [(r, int(o))
+                         for o in np.unique(ids[la["chunk"] // K])]
+        if tail_mode == "carry":
+            if bmeta is not None and res.bg_delivered is not None \
+                    and len(res.bg_delivered["meta"]):
+                d = res.bg_delivered
+                mi = np.asarray(d["meta"], np.int64)
+                n = mi.size
+                gen = bmeta["gen"][mi].astype(np.int32)
+                rec.late_log = TransferTrace.from_arrays(
+                    K=K, slot=np.zeros(n, np.int32),
+                    sender=bmeta["snd"][mi].astype(np.int32),
+                    receiver=bmeta["rcv"][mi].astype(np.int32),
+                    chunk=bmeta["chunk"][mi],
+                    owner=bmeta["owner"][mi].astype(np.int32),
+                    b_size=np.zeros(n, np.int64),
+                    o_size=np.zeros(n, np.int64),
+                    phase=np.full(n, 2, dtype=np.int8),
+                    round=np.full(n, r, dtype=np.int32),
+                    t_start=d["t_start"], t_end=d["t_end"],
+                    generation=gen,
+                    staleness=(r - gen).astype(np.int32))
+                for g, o, c in _group_counts(bmeta["gen"][mi],
+                                             bmeta["owner"][mi]):
+                    key = (g, o)
+                    left_n = self._outstanding.get(key)
+                    if left_n is None:
+                        continue
+                    self._outstanding[key] = left_n - c
+                # Delivered receivers become holders: the relay replanner
+                # picks them as senders at the next boundary.
+                for g, c2 in sorted({(int(g_), int(c_)) for g_, c_ in
+                                     zip(bmeta["gen"][mi],
+                                         bmeta["chunk"][mi])}):
+                    got = bmeta["rcv"][mi][
+                        (bmeta["gen"][mi] == g)
+                        & (bmeta["chunk"][mi] == c2)]
+                    old = self._holders.get((g, c2))
+                    if old is not None:
+                        self._holders[(g, c2)] = np.union1d(old, got)
+            # Requeue the survivors plus this round's fresh tail (older
+            # generations first: queue order is pipeline priority).
+            parts = []
+            if bmeta is not None and res.bg_remaining is not None \
+                    and res.bg_remaining.size:
+                rm = np.asarray(res.bg_remaining, np.int64)
+                parts.append({k: v[rm] for k, v in bmeta.items()})
+            if res.tail is not None:
+                t = res.tail
+                for o in np.asarray(t["dead_owners"], np.int64):
+                    rec.dead_updates.append((r, int(ids[o])))
+                nt = len(t["snd"])
+                if nt:
+                    owner_g = ids[t["chunk"] // K]
+                    parts.append({"snd": ids[t["snd"]],
+                                  "rcv": ids[t["rcv"]],
+                                  "chunk": t["chunk"],
+                                  "owner": owner_g,
+                                  "gen": np.full(nt, r, dtype=np.int64)})
+                    for g, o, c in _group_counts(
+                            np.full(nt, r, dtype=np.int64), owner_g):
+                        self._outstanding[(g, o)] = \
+                            self._outstanding.get((g, o), 0) + c
+                    # Seed the relay state with cut-time holder sets.
+                    ucols = np.asarray(t["ucols"], np.int64)
+                    hmask = t["holder_mask"]
+                    for j, c2 in enumerate(ucols):
+                        self._holders[(r, int(c2))] = ids[hmask[:, j]]
+                    uown = np.unique(ids[ucols // K])
+                    for o in uown:
+                        self._update_chunks[(r, int(o))] = \
+                            ucols[ids[ucols // K] == o]
+            if parts:
+                self._backlog = {k: np.concatenate([p[k] for p in parts])
+                                 for k in ("snd", "rcv", "chunk",
+                                           "owner", "gen")}
+            # Updates whose last outstanding chunk landed this round are
+            # ready for the round-r merge (staleness r - gen > 0).
+            done = [k for k, v in self._outstanding.items() if v <= 0]
+            for k in done:
+                del self._outstanding[k]
+                self._gc_update(k)
+            rec.late_ready.extend(done)
+        elif tail_mode == "drain":
+            if res.tail is not None:
+                for o in np.asarray(res.tail["dead_owners"], np.int64):
+                    rec.dead_updates.append((r, int(ids[o])))
+            rec.late_ready.extend(delivered)
+
+    # -- cross-round wall clock (async) -----------------------------------
+    def wall_trace(self, include_late: bool = True) -> TransferTrace:
+        """The session trace on ONE wall clock: every row's time columns
+        shifted by its round's start offset, so cross-round orderings
+        (overlap, boundary drains) are directly comparable."""
+        parts = [rec.global_log() for rec in self.history]
+        if include_late:
+            parts += [rec.late_log for rec in self.history
+                      if rec.late_log is not None]
+        tr = TransferTrace.concat([p for p in parts if len(p)])
+        if not len(tr):
+            return tr
+        S = np.asarray(self.offsets, np.float64)
+        shift = S[np.minimum(tr.round, len(S) - 1)]
+        tr.t_start = tr.t_start + shift
+        tr.t_end = tr.t_end + shift
+        return tr
 
     def run(self, rounds: int, **kw) -> list[SessionRound]:
         return [self.next_round(**kw) for _ in range(rounds)]
 
     # -- cross-round observation surface ---------------------------------
-    def trace(self) -> TransferTrace:
+    def trace(self, include_late: bool = False) -> TransferTrace:
         """The session-wide :class:`TransferTrace`: every round's log in
         global peer ids with the ``round`` column stamped — the input
         cross-round adversaries (``attacks.persistent_neighbor_linkage``)
-        consume together with :meth:`pair_exposure`."""
-        return TransferTrace.concat(
-            [rec.global_log() for rec in self.history])
+        consume together with :meth:`pair_exposure`.
+
+        ``include_late`` appends the async late-delivery rows
+        (generation < round, staleness > 0).  They keep their
+        round-local chunk ids, so descriptor-keyed grading
+        (``desc_owner_lookup``) over a mixed trace should use
+        :func:`repro.fl.asyncfl.adversary_view`, which band-shifts late
+        descriptors into a disjoint range per generation."""
+        parts = [rec.global_log() for rec in self.history]
+        if include_late:
+            parts += [rec.late_log for rec in self.history
+                      if rec.late_log is not None]
+        return TransferTrace.concat(parts)
 
     # -- cross-round topology metrics (privacy §III-E) -------------------
     def _round_edges(self, rec: SessionRound) -> set:

@@ -74,6 +74,13 @@ class RoundResult:
     fluid_bt: bool = False
     tracker_log: dict | None = None
     timings: dict | None = None    # wall seconds per run() phase (bench)
+    # Async extensions (fl/asyncfl.py; all None/default on sync runs):
+    cut: bool = False              # quorum cut fired before all_done
+    tail: dict | None = None       # undelivered (snd, rcv, chunk) at cut
+    late: dict | None = None       # drain-mode boundary deliveries
+    drain_s: float = 0.0           # wall seconds of the boundary drain
+    bg_delivered: dict | None = None   # prior-generation rows delivered
+    bg_remaining: np.ndarray | None = None  # meta ids still queued
 
 
 class RoundSimulator:
@@ -97,6 +104,7 @@ class RoundSimulator:
         spray_plan=None,
         time_engine: str = "slot",      # "slot" | "event"
         net=None,                       # repro.net.NetConfig (event only)
+        background=None,                # (snd, rcv, meta) carried tail
     ):
         """``overlay``/``up``/``down``/``rng`` let a :class:`SwarmSession`
         inject a persistent population (evolving topology, sticky
@@ -171,6 +179,12 @@ class RoundSimulator:
         # Session-computed spray plan (churn-aware spray budgets); None
         # keeps the historical full re-spray path byte-identical.
         self.spray_plan = spray_plan
+        # Carried background tail (async overlap): (snd, rcv, meta)
+        # local-id arrays queued onto the event engine before the spray,
+        # so the previous generation's tail contends with this round.
+        if background is not None and time_engine != "event":
+            raise ValueError("background tails need time_engine='event'")
+        self.background = background
 
     # ------------------------------------------------------------------
     def _spray(self, engine=None):
@@ -207,12 +221,31 @@ class RoundSimulator:
             ids = (np.argpartition(keys, m - 1, axis=1)[:, :m] if m < K
                    else np.argsort(keys, axis=1))
             # One uniform non-neighbor per sprayed chunk (with
-            # replacement): pick the j-th non-neighbor by rank; stable
-            # argsort of ~nn puts non-neighbor columns first ascending.
+            # replacement): the pick-th non-neighbor in ascending
+            # column order (the rank a stable argsort of ~nn yields).
+            # Solved as an order-statistic fixed point over the row's
+            # BLOCKED columns (neighbors + self, ~min_degree of them):
+            # c = pick + |{blocked <= c}| converges from below in
+            # O(deg) tiny iterations — no O(n^2 log n) sort and no
+            # O(n^2) scan-sized temporaries, which dominated spray
+            # setup at n=5000 (BENCH_scheduler.json before/after).
             pick = (self.rng.random((rows.size, m))
                     * counts[rows, None]).astype(np.int64)
-            order = np.argsort(~nn[rows], axis=1, kind="stable")
-            tgts = order[np.arange(rows.size)[:, None], pick]
+            blk = self.adj[rows].copy()
+            blk[np.arange(rows.size), rows] = True
+            ri, ci = np.nonzero(blk)
+            nblk = np.bincount(ri, minlength=rows.size)
+            off = np.cumsum(nblk) - nblk
+            maxb = int(nblk.max(initial=0))
+            B = np.full((rows.size, maxb), cfg.n, dtype=np.int64)
+            B[ri, np.arange(ri.size) - off[ri]] = ci
+            tgts = pick.copy()
+            for _ in range(maxb + 2):
+                bumped = (pick
+                          + (B[:, None, :] <= tgts[:, :, None]).sum(2))
+                if np.array_equal(bumped, tgts):
+                    break
+                tgts = bumped
             tgts = tgts.ravel().astype(np.int64)
             snd = np.repeat(rows, m).astype(np.int64)
             chk = (rows[:, None] * K + ids).ravel()
@@ -256,10 +289,115 @@ class RoundSimulator:
             self.state.active[v] = False
 
     # ------------------------------------------------------------------
+    def _quorum_met(self, k: int) -> bool:
+        """FedBuff quorum (fl/asyncfl.py): >= k updates are swarm-
+        complete — held in full by EVERY active peer, so a merge over
+        them is identical at every peer (sole-writer consistency)."""
+        st = self.state
+        if not st.active.any():
+            return True
+        complete = st.reconstructable_sets()[st.active].all(axis=0)
+        return int(complete.sum()) >= k
+
+    def _extract_tail(self):
+        """Undelivered (snd, rcv, chunk) work at the quorum cut.
+
+        One row per missing (active receiver, chunk) pair; the sender is
+        the active holder with the fastest uplink (ties break to the
+        lowest id) — deterministic, zero rng draws, so the sync path's
+        streams are untouched.  Chunks no active peer holds are
+        unservable: their rows are dropped and the owning updates
+        reported in ``dead_owners`` (they can never complete).
+
+        ``ucols``/``holder_mask`` expose the cut-time holder sets of the
+        missing chunks (local peer x unique chunk) — the carry path's
+        relay replanner (session._map_backlog) re-picks senders from the
+        *growing* holder set each round, so a scarce chunk spreads
+        exponentially through background deliveries instead of fanning
+        out of its sole original holder.
+        """
+        st = self.state
+        K = self.cfg.chunks_per_update
+        act = st.active
+        rcv, chk = np.nonzero(act[:, None] & ~st.have)
+        if rcv.size == 0:
+            return None
+        ucols, cinv = np.unique(chk, return_inverse=True)
+        holder_mask = st.have[:, ucols] & act[:, None]
+        score = np.where(holder_mask, self.up_bps[:, None], -1.0)
+        best = np.argmax(score, axis=0)
+        servable = score[best, np.arange(ucols.size)] > 0
+        keep = servable[cinv]
+        dead = np.unique(ucols[~servable] // K)
+        if not keep.any():
+            return {"snd": np.zeros(0, np.int64),
+                    "rcv": np.zeros(0, np.int64),
+                    "chunk": np.zeros(0, np.int64),
+                    "dead_owners": dead,
+                    "ucols": ucols[servable],
+                    "holder_mask": holder_mask[:, servable]}
+        return {"snd": best[cinv][keep].astype(np.int64),
+                "rcv": rcv[keep].astype(np.int64),
+                "chunk": chk[keep].astype(np.int64),
+                "dead_owners": dead,
+                "ucols": ucols[servable],
+                "holder_mask": holder_mask[:, servable]}
+
+    def _drain_tail(self, tail: dict, engine):
+        """Deliver the whole tail at the round boundary (serialized
+        wall clock — the no-overlap ablation).  Event engine: a solo
+        fair-share drain.  Slot engine: a receiver-paced schedule on the
+        slot grid (downlink budgets; an idealized lower bound — the
+        event engine is the honest timing path).  Stamps are relative
+        to the drain start."""
+        cfg = self.cfg
+        T = len(tail["snd"])
+        if T == 0:
+            return None, 0.0
+        if engine is not None:
+            engine.set_background(tail["snd"], tail["rcv"],
+                                  np.arange(T, dtype=np.int64))
+            t0 = engine.t
+            meta, ts, te = engine.drain_background()
+            ts_full = np.empty(T, np.float64)
+            te_full = np.empty(T, np.float64)
+            ts_full[meta] = ts
+            te_full[meta] = te
+            slot_idx = np.zeros(T, np.int64)
+            drain_s = engine.t - t0
+        else:
+            rcv = tail["rcv"]          # receiver-major (nonzero order)
+            first = np.searchsorted(rcv, rcv)
+            posr = np.arange(T) - first
+            slot_idx = posr // np.maximum(self.state.down[rcv], 1)
+            ts_full = slot_idx * cfg.slot_seconds
+            te_full = ts_full + cfg.slot_seconds
+            drain_s = float((int(slot_idx.max()) + 1) * cfg.slot_seconds)
+        late = {"snd": tail["snd"], "rcv": tail["rcv"],
+                "chunk": tail["chunk"], "slot": slot_idx,
+                "t_start": ts_full, "t_end": te_full}
+        return late, float(drain_s)
+
+    # ------------------------------------------------------------------
     def run(self, collect_maxflow: bool = False,
-            warmup_only: bool = False) -> RoundResult:
+            warmup_only: bool = False,
+            quorum_k: int | None = None,
+            tail_mode: str = "none",
+            bt_budget: int | None = None) -> RoundResult:
         cfg = self.cfg
         st = self.state
+        if tail_mode not in ("none", "drain", "carry"):
+            raise ValueError(f"unknown tail_mode {tail_mode!r}")
+        if tail_mode == "carry" and self.time_engine != "event":
+            raise ValueError("tail_mode='carry' needs time_engine="
+                             "'event' (overlap is a flow-level notion)")
+        if quorum_k is not None and (warmup_only
+                                     or self.bt_mode == "fluid"):
+            raise ValueError("quorum cuts need the exact BT engine")
+        if bt_budget is not None and quorum_k is None:
+            raise ValueError("bt_budget is an async deadline: it needs "
+                             "quorum_k/tail_mode so the cut has a tail "
+                             "path (otherwise it would silently mask)")
         engine = None
         _clk = _clock
         _t0 = _clk()
@@ -267,6 +405,10 @@ class RoundSimulator:
             from repro.net import EventEngine
             engine = EventEngine(cfg.n, cfg.chunk_bytes, self.up_bps,
                                  self.down_bps, self.net, cfg.seed)
+            if self.background is not None:
+                # Previous generation's tail: contends with this round's
+                # spray/warm-up/BT from t=0 (overlapped dissemination).
+                engine.set_background(*self.background)
         if cfg.enable_preround:
             self._spray(engine)
         t_spray_s = engine.t if engine is not None else 0.0
@@ -326,7 +468,18 @@ class RoundSimulator:
                 engine.advance(eff_slots * cfg.slot_seconds)
         else:
             idle = 0
+            bt_base = st.slot
             while not st.all_done() and st.slot < cfg.s_max:
+                # FedBuff quorum (async): stop swarming the moment >= k
+                # updates are swarm-complete; the rest become the tail.
+                if quorum_k is not None and self._quorum_met(quorum_k):
+                    break
+                # Async round deadline: the directive-cycle budget after
+                # warm-up.  Sync rounds idle-wait the stretched barrier
+                # of every straggler cycle; the async cut bounds that
+                # and hands the rest to the tail path.
+                if bt_budget is not None and st.slot - bt_base >= bt_budget:
+                    break
                 self._apply_dropouts()
                 snd, rcv, chk = self._schedule_filtered(
                     lambda: bt_exact_slot(st))
@@ -347,6 +500,19 @@ class RoundSimulator:
         _t_bt = _clk()
         t_round_s = (engine.t if engine is not None
                      else t_round * cfg.slot_seconds)
+
+        # ---- async tail (quorum cut; fl/asyncfl.py) ----
+        cut = quorum_k is not None and not st.all_done()
+        tail = late = None
+        drain_s = 0.0
+        if cut and tail_mode != "none":
+            tail = self._extract_tail()
+            if tail is not None and tail_mode == "drain":
+                late, drain_s = self._drain_tail(tail, engine)
+        bg_delivered = bg_remaining = None
+        if self.background is not None:
+            bg_delivered = engine.background_log()
+            bg_remaining = engine.background_remaining()
 
         # ---- metrics ----
         total_up = float(self.up.sum())
@@ -399,6 +565,8 @@ class RoundSimulator:
                      "warmup_s": _t_warmup - _t_spray,
                      "bt_s": _t_bt - _t_warmup,
                      "emit_s": _t_emit - _t_bt},
+            cut=cut, tail=tail, late=late, drain_s=drain_s,
+            bg_delivered=bg_delivered, bg_remaining=bg_remaining,
         )
 
 

@@ -17,12 +17,41 @@ per-transfer attribution posterior ``O_u / B_u <= kappa / k_gate``
 """
 from __future__ import annotations
 
+import ctypes
+import sys
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from .trace import TransferTrace
 from .types import SwarmConfig
+
+_MADV_HUGEPAGE = 14          # asm-generic/mman-common.h
+_HUGE_2M = 2 * 1024 * 1024
+
+
+def hint_hugepages(arr: np.ndarray) -> bool:
+    """Best-effort ``madvise(MADV_HUGEPAGE)`` over ``arr``'s 2 MiB-aligned
+    interior.  With THP in ``madvise`` mode (the common server default)
+    this collapses first-touch faulting of a multi-GB mapping from one
+    4 KiB fault per page to one per 2 MiB — the difference between a
+    ~30 s and a ~3 s inventory fill at n=5000 (BENCH_scheduler.json
+    ``setup_s``).  Returns False (harmless no-op) off Linux, on small
+    arrays, or when the kernel refuses the hint."""
+    if not sys.platform.startswith("linux") or arr.nbytes < _HUGE_2M:
+        return False
+    try:
+        libc = ctypes.CDLL(None, use_errno=True)
+        addr = arr.ctypes.data
+        start = (addr + _HUGE_2M - 1) & ~(_HUGE_2M - 1)
+        end = (addr + arr.nbytes) & ~(_HUGE_2M - 1)
+        if end <= start:
+            return False
+        return libc.madvise(ctypes.c_void_p(start),
+                            ctypes.c_size_t(end - start),
+                            _MADV_HUGEPAGE) == 0
+    except Exception:  # pragma: no cover - exotic libc
+        return False
 
 
 @dataclass
@@ -103,16 +132,19 @@ class SwarmState:
         self.rng = rng
 
         C = cfg.total_chunks
-        # Eagerly fault the inventory in sequentially (wide stores via a
-        # uint64 view when the extent allows); lazily-mapped zeros would
-        # instead pay a first-touch page fault per scattered write in
-        # apply_transfers — tens of seconds at n >= 5000.
-        self.have = np.empty((n, C), dtype=bool)
-        flat = self.have.reshape(-1)
-        flat[: flat.size - flat.size % 8].view(np.uint64).fill(0)
-        flat[flat.size - flat.size % 8:] = False
-        for v in range(n):
-            self.have[v, v * K:(v + 1) * K] = True
+        # calloc'd zero pages + a transparent-huge-page hint: with 2 MiB
+        # mappings, eagerly faulting the inventory in sequentially costs
+        # ~0.5 GB/s-of-zeroing instead of one 4 KiB fault per page (a
+        # 10x setup_s cut at n=5000 — BENCH_scheduler.json).  Without
+        # the hint (non-Linux / THP disabled) skip the eager fill: lazy
+        # zero pages spread the fault cost over apply_transfers writes,
+        # which beats an up-front 4 KiB-page fill by ~5x.
+        self.have = np.zeros((n, C), dtype=bool)
+        if hint_hugepages(self.have):
+            flat = self.have.reshape(-1)
+            flat[: flat.size - flat.size % 8].view(np.uint64).fill(0)
+        self.have[np.repeat(np.arange(n), K),
+                  np.arange(n * K, dtype=np.int64)] = True
         # Log-replay invariant marker (see jit_engine._sync_have_dev):
         # after construction, apply_transfers is the only writer of
         # *this* array; schedulers seeing a different object (Byzantine

@@ -22,6 +22,10 @@ Columns (equal-length numpy arrays)
 ``round``      int32   session round index (0 for single-round traces)
 ``t_start``    float64 wall-clock start of the transfer (seconds)
 ``t_end``      float64 wall-clock completion instant (seconds)
+``generation`` int32   model generation the payload belongs to; equals
+                       ``round`` for on-time rows, lags it for the late
+                       deliveries of the async runner (fl/asyncfl.py)
+``staleness``  int32   ``delivery_round - generation`` (0 = on time)
 
 The two time columns are the continuous-time observation surface the
 event engine (:mod:`repro.net`) opens: per-transfer start/finish
@@ -65,11 +69,13 @@ import numpy as np
 PHASE_CODES = {"spray": 0, "warmup": 1, "bt": 2}
 
 _KEYS = ("slot", "sender", "receiver", "chunk", "owner",
-         "b_size", "o_size", "phase", "round", "t_start", "t_end")
+         "b_size", "o_size", "phase", "round", "t_start", "t_end",
+         "generation", "staleness")
 _DTYPES = {"slot": np.int32, "sender": np.int32, "receiver": np.int32,
            "chunk": np.int64, "owner": np.int32, "b_size": np.int64,
            "o_size": np.int64, "phase": np.int8, "round": np.int32,
-           "t_start": np.float64, "t_end": np.float64}
+           "t_start": np.float64, "t_end": np.float64,
+           "generation": np.int32, "staleness": np.int32}
 
 
 def _empty_cols(n: int = 0) -> dict:
@@ -80,6 +86,10 @@ def _empty_cols(n: int = 0) -> dict:
 class TransferTrace:
     """Struct-of-arrays transfer record (one row per delivered chunk)."""
 
+    generation: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int32))
+    staleness: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int32))
     slot: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
     sender: np.ndarray = field(default_factory=lambda: np.zeros(0, np.int32))
     receiver: np.ndarray = field(
@@ -112,6 +122,13 @@ class TransferTrace:
             s = out["slot"].astype(np.float64) * slot_seconds
             out["t_start"] = s
             out["t_end"] = s + slot_seconds
+        if "generation" not in cols:
+            # Synchronous default: every row carries the model of its
+            # own round, delivered on time.  The async session stamps
+            # lagging generations (and staleness > 0) explicitly.
+            out["generation"] = out["round"].astype(np.int32)
+        if "staleness" not in cols:
+            out["staleness"] = np.zeros(n, dtype=np.int32)
         return cls(K=K, **out)
 
     @classmethod

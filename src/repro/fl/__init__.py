@@ -1,1 +1,1 @@
-from . import baselines, client, models_small, runner
+from . import asyncfl, baselines, client, models_small, runner

@@ -44,6 +44,28 @@ def test_event_twin_time_columns_are_real_and_identical():
     assert a.t_end.tobytes() == b.t_end.tobytes()
 
 
+@pytest.mark.parametrize("engine", ["slot", "event"])
+def test_async_twin_trace_byte_identical(engine):
+    """Async extension: a deadline-cut session whose tail delivers
+    LATE must still replay byte-for-byte, including the per-update
+    ``generation``/``staleness`` columns the async path stamps."""
+    def once():
+        ses = SwarmSession(CFG, time_engine=engine,
+                           net=NET if engine == "event" else None,
+                           evolve_overlay=True)
+        ses.run(3, quorum_k=CFG.n, tail_mode="drain", bt_budget=3)
+        return ses.trace(include_late=True)
+    a, b = once(), once()
+    assert len(a) == len(b) and len(a) > 0
+    assert (a.staleness > 0).any(), "twin must exercise the async path"
+    for k in a.keys():
+        col_a, col_b = getattr(a, k), getattr(b, k)
+        assert col_a.dtype == col_b.dtype, k
+        assert col_a.tobytes() == col_b.tobytes(), (
+            f"column {k!r} differs between async twin runs at seed "
+            f"{CFG.seed} on the {engine!r} engine")
+
+
 def test_random_overlay_requires_threaded_rng():
     """Regression pin for the RNG004 fix: the old constant-seed
     fallback handed every un-threaded caller the SAME overlay."""
