@@ -60,7 +60,8 @@ def run(fast: bool = True):
     by_family: dict = {}
     for f in findings:
         fam = ("visibility" if f.rule.startswith("VIS")
-               else "jit" if f.rule.startswith("JIT") else "rng")
+               else "jit" if f.rule.startswith("JIT")
+               else "obs" if f.rule.startswith("OBS") else "rng")
         by_family[fam] = by_family.get(fam, 0) + 1
     rows = scorecard(ctx, findings)
     ready = sum(1 for *_x, ok in rows if ok)

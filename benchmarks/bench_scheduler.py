@@ -104,17 +104,18 @@ def _sweep_cfg(n: int, impl: str) -> SwarmConfig:
 
 def engine_point(n: int, impl: str) -> dict:
     """One warm-up-only sweep point with per-phase breakdown."""
-    sim_mod.set_clock(time.perf_counter)
-    jit_engine.set_clock(time.perf_counter)
-    jit_engine.reset_phase_timers()
-    t0 = time.perf_counter()
-    sim = sim_mod.RoundSimulator(_sweep_cfg(n, impl))
-    setup_s = time.perf_counter() - t0
-    res = sim.run(warmup_only=True)
-    total_s = time.perf_counter() - t0
-    engine_ph = jit_engine.reset_phase_timers()
-    sim_mod.set_clock(None)
-    jit_engine.set_clock(None)
+    # measured_clock installs the perf clock into BOTH the simulator
+    # and the jit engine and restores them even if the run raises —
+    # the scoped replacement for the leaky set_clock(...)/set_clock(None)
+    # pairing this harness used to hand-roll.
+    with sim_mod.measured_clock() as clk:
+        jit_engine.reset_phase_timers()
+        t0 = clk()
+        sim = sim_mod.RoundSimulator(_sweep_cfg(n, impl))
+        setup_s = clk() - t0
+        res = sim.run(warmup_only=True)
+        total_s = clk() - t0
+        engine_ph = jit_engine.reset_phase_timers()
     tm = res.timings
     m = res.metrics
     row = {

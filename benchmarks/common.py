@@ -1,6 +1,8 @@
-"""Shared benchmark utilities: result printing + JSON artifacts."""
+"""Shared benchmark utilities: result printing, JSON artifacts, and the
+regression gate (``compare_bench``) behind ``run.py --check``."""
 from __future__ import annotations
 
+import fnmatch
 import json
 import os
 import time
@@ -15,6 +17,80 @@ def save(name: str, payload: dict):
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, default=str)
     return path
+
+
+def load(name: str) -> dict | None:
+    """Read a committed ``results/bench/<name>.json`` baseline."""
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _flatten(d: dict, prefix: str = "") -> dict:
+    """Nested dict -> dotted scalar paths (numbers and bools only)."""
+    out: dict = {}
+    for k, v in d.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_flatten(v, key + "."))
+        elif isinstance(v, bool) or isinstance(v, (int, float)):
+            out[key] = v
+    return out
+
+
+def compare_bench(baseline: dict, current: dict,
+                  tolerances: list[dict]) -> dict:
+    """Diff a fresh benchmark payload against a committed baseline.
+
+    ``tolerances`` is a list of specs, each::
+
+        {"path": "cli_wall_s",          # fnmatch glob over dotted paths
+         "direction": "lower",          # "lower" | "higher" | "equal"
+         "rel": 0.5, "abs": 0.5}        # allowed slack (max of the two)
+
+    ``direction`` states which way is BETTER for the metric: a
+    ``"lower"`` metric (wall seconds) regresses when the current value
+    exceeds baseline + slack; ``"higher"`` (accuracy, ready counts)
+    when it falls below baseline - slack; ``"equal"`` (exact contracts
+    like exit codes and validity booleans) when it leaves the slack
+    band entirely.  A spec whose glob matches nothing in the baseline
+    fails the gate — a silently-vanished metric is itself a regression.
+    """
+    base, cur = _flatten(baseline), _flatten(current)
+    checked: list[dict] = []
+    regressions: list[dict] = []
+    unmatched: list[str] = []
+    for spec in tolerances:
+        paths = fnmatch.filter(sorted(base), spec["path"])
+        if not paths:
+            unmatched.append(spec["path"])
+            continue
+        direction = spec.get("direction", "equal")
+        for p in paths:
+            if p not in cur:
+                regressions.append({"path": p, "baseline": base[p],
+                                    "current": None,
+                                    "reason": "missing in current run"})
+                continue
+            b, c = float(base[p]), float(cur[p])
+            slack = max(abs(b) * spec.get("rel", 0.0),
+                        spec.get("abs", 0.0))
+            if direction == "lower":
+                ok = c <= b + slack
+            elif direction == "higher":
+                ok = c >= b - slack
+            else:
+                ok = abs(c - b) <= slack
+            entry = {"path": p, "baseline": base[p], "current": cur[p],
+                     "direction": direction, "slack": slack, "ok": ok}
+            checked.append(entry)
+            if not ok:
+                regressions.append(entry)
+    return {"ok": not regressions and not unmatched,
+            "checked": checked, "regressions": regressions,
+            "unmatched": unmatched}
 
 
 def banner(title: str):

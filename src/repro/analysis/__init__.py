@@ -1,12 +1,15 @@
 """repro.analysis — swarmlint: static invariant analysis for the repro.
 
-Three rule families guard the contracts the reproduction's claims rest
+Four rule families guard the contracts the reproduction's claims rest
 on (see ``docs/INVARIANTS.md``):
 
 * ``rng``         — one threaded rng stream (RNG001-RNG007);
 * ``visibility``  — SlotView tier discipline at lint time (VIS001);
 * ``jit``         — jit-readiness of the kernel-slated hot paths
-                    (JIT101-JIT103) + scorecard.
+                    (JIT101-JIT103) + scorecard;
+* ``obs``         — telemetry discipline in the sim layers: no print,
+                    no inline host-time reads (OBS001-OBS002); route
+                    through ``repro.obs`` / the injectable clocks.
 
 Pure stdlib (no numpy/jax import), so ``python -m repro.analysis``
 runs anywhere a checkout exists.  Rules self-register via
@@ -18,7 +21,7 @@ from .registry import (FAMILIES, AnalysisContext, AnalyzerRule,
                        get_rules, register_rule, rule_ids)
 
 # Importing the rule modules registers their rules.
-from . import jit_rules, rng_rules, visibility
+from . import jit_rules, obs_rules, rng_rules, visibility
 from .cli import collect_findings, main
 from .jit_rules import JIT_TARGETS, scorecard
 from .visibility import slotview_tiers
@@ -26,7 +29,7 @@ from .visibility import slotview_tiers
 __all__ = [
     "AnalysisContext", "AnalyzerRule", "Baseline", "FAMILIES",
     "Finding", "JIT_TARGETS", "collect_findings", "get_rules",
-    "jit_rules", "main", "register_rule", "rng_rules", "rule_ids",
-    "scorecard", "slotview_tiers", "split_by_baseline", "visibility",
-    "write_baseline",
+    "jit_rules", "main", "obs_rules", "register_rule", "rng_rules",
+    "rule_ids", "scorecard", "slotview_tiers", "split_by_baseline",
+    "visibility", "write_baseline",
 ]

@@ -14,7 +14,7 @@ from __future__ import annotations
 import ast
 from pathlib import Path
 
-FAMILIES = ("rng", "visibility", "jit")
+FAMILIES = ("rng", "visibility", "jit", "obs")
 
 
 class AnalysisContext:

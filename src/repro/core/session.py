@@ -50,6 +50,8 @@ from collections.abc import Callable
 
 import numpy as np
 
+from repro import obs
+
 from . import capacities as cap
 from .overlay import _components, random_overlay
 from .simulator import RoundResult, RoundSimulator
@@ -599,8 +601,20 @@ class SwarmSession:
         self.begin_round()
         r, ids, joined, left, rejoined, plan = self._pending
         self._pending = None
+        orec = obs.get()
+        if orec.enabled:
+            # Rows recorded inside this round carry the session round
+            # index and land on the session wall clock (offsets[r]).
+            orec.set_ctx(round=int(r))
+            orec.time_base = float(self.offsets[-1])
+            orec.event("session.round_start", t=0.0,
+                       active=int(ids.size), joined=int(joined.size),
+                       left=int(left.size), rejoined=int(rejoined.size),
+                       population=int(self.n_peers))
         background, bmeta, dead_updates = self._map_backlog(r, ids,
                                                             tail_mode)
+        if orec.enabled and background is not None:
+            orec.gauge("session.carry_backlog", int(background[0].size))
         cfg_r = self.cfg.replace(n=int(ids.size),
                                  seed=int(self.round_seed(r)))
         if self.evolve:
@@ -642,6 +656,18 @@ class SwarmSession:
         self._settle_async(rec, r, ids, res, bmeta, tail_mode)
         self.offsets.append(self.offsets[-1] + res.metrics.t_round_s
                             + res.drain_s)
+        orec = obs.get()
+        if orec.enabled:
+            orec.event("session.round_end",
+                       t=res.metrics.t_round_s + res.drain_s,
+                       dropped_midround=int(dropped.size),
+                       cut=bool(res.cut),
+                       late_ready=len(rec.late_ready),
+                       dead_updates=len(rec.dead_updates))
+            orec.counter("session.rounds")
+            orec.gauge("session.backlog_rows",
+                       int(len(self._backlog["snd"]))
+                       if self._backlog is not None else 0)
         self.history.append(rec)
         self.round_idx += 1
         return rec

@@ -27,9 +27,13 @@ reconstructable active set — standard partial-participation semantics.
 """
 from __future__ import annotations
 
+import contextlib
+import time
 from dataclasses import dataclass
 
 import numpy as np
+
+from repro import obs
 
 from . import capacities as cap
 from .bittorrent import bt_exact_slot, run_bt_fluid
@@ -58,6 +62,32 @@ def set_clock(fn) -> None:
     are diagnostics and never feed back into simulated time."""
     global _clock
     _clock = fn if fn is not None else _zero_clock
+
+
+@contextlib.contextmanager
+def measured_clock(fn=None):
+    """Scoped measurement clock: install ``fn`` (default
+    ``time.perf_counter``) as the phase-timing clock of BOTH this
+    module and :mod:`repro.core.jit_engine`, yield it, and ALWAYS
+    restore the previous clocks on exit.
+
+    This replaces the paired ``set_clock(...)`` / ``set_clock(None)``
+    benchmark idiom, which leaked: an exception between the calls left
+    the perf clock installed for subsequent determinism-sensitive code
+    (timings are diagnostics, but a surviving host-clock hook is
+    exactly what RNG007 exists to keep out of the sim layer).
+    """
+    from . import jit_engine
+    if fn is None:
+        fn = time.perf_counter
+    prev, prev_jit = _clock, jit_engine._clock
+    set_clock(fn)
+    jit_engine.set_clock(fn)
+    try:
+        yield fn
+    finally:
+        set_clock(prev)
+        jit_engine.set_clock(prev_jit)
 
 
 @dataclass
@@ -399,6 +429,7 @@ class RoundSimulator:
                              "quorum_k/tail_mode so the cut has a tail "
                              "path (otherwise it would silently mask)")
         engine = None
+        rec = obs.get()
         _clk = _clock
         _t0 = _clk()
         if self.time_engine == "event":
@@ -432,6 +463,8 @@ class RoundSimulator:
                 ts, te = engine.warmup_cycle(st.slot, snd, rcv, chk)
                 st.apply_transfers(snd, rcv, chk, phase_code=1,
                                    t_start=ts, t_end=te)
+            if rec.enabled:
+                rec.hist("sched.warmup_grants_per_slot", len(snd))
             st.slot += 1
             # Stall guard: lags leave early slots empty, and a receiver
             # whose only missing chunks are unreplicated owner chunks
@@ -489,6 +522,8 @@ class RoundSimulator:
                     ts, te = engine.bt_cycle(snd, rcv, chk)
                     st.apply_transfers(snd, rcv, chk, phase_code=2,
                                        t_start=ts, t_end=te)
+                if rec.enabled:
+                    rec.hist("sched.bt_grants_per_slot", len(snd))
                 st.slot += 1
                 idle = idle + 1 if len(snd) == 0 else 0
                 if idle >= 3:
@@ -550,6 +585,28 @@ class RoundSimulator:
 
         log = st.log.finalize(cfg.chunks_per_update, cfg.slot_seconds)
         _t_emit = _clk()
+        # Per-phase instrumentation: one (name, sim start, sim end, host
+        # wall) record per run() phase.  The obs spans are the
+        # first-class stream; the legacy ``timings`` dict is derived
+        # from the same checkpoints for back-compat consumers.
+        phases = (("spray", 0.0, float(t_spray_s), _t_spray - _t0),
+                  ("warmup", float(t_spray_s), float(t_warm_s),
+                   _t_warmup - _t_spray),
+                  ("bt", float(t_warm_s), float(t_round_s),
+                   _t_bt - _t_warmup),
+                  ("emit", float(t_round_s), float(t_round_s),
+                   _t_emit - _t_bt))
+        if rec.enabled:
+            for name, s0, s1, wall in phases:
+                rec.span_at(f"round.{name}", s0, s1, wall_s=wall)
+            rec.span_at("round.total", 0.0, float(t_round_s),
+                        wall_s=_t_emit - _t0, n=cfg.n,
+                        engine=self.time_engine,
+                        impl=cfg.scheduler_impl, cut=bool(cut),
+                        failed_open=bool(failed_open))
+            if drain_s:
+                rec.span_at("round.drain", float(t_round_s),
+                            float(t_round_s) + float(drain_s))
         return RoundResult(
             metrics=m, log=log, reconstructable=recon,
             active=st.active.copy(), adj=self.adj, up=self.up,
@@ -557,14 +614,10 @@ class RoundSimulator:
             maxflow_ub=np.asarray(ubs, dtype=np.int64) if collect_maxflow else None,
             warmup_sent_per_slot=warm_sent_arr,
             fluid_bt=fluid,
-            tracker_log=(dict(engine.tracker.as_log(),
-                              data_s=engine.data_s,
-                              n_solves=engine.n_solves)
+            tracker_log=(engine.control_log()
                          if engine is not None else None),
-            timings={"spray_s": _t_spray - _t0,
-                     "warmup_s": _t_warmup - _t_spray,
-                     "bt_s": _t_bt - _t_warmup,
-                     "emit_s": _t_emit - _t_bt},
+            timings={f"{name}_s": wall
+                     for name, _, _, wall in phases},
             cut=cut, tail=tail, late=late, drain_s=drain_s,
             bg_delivered=bg_delivered, bg_remaining=bg_remaining,
         )

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import (ChurnAwareSpray, ChurnModel, SwarmConfig,
                         SwarmSession)
 from repro.core.aggregation import fedavg_pytree, per_client_aggregates
@@ -255,6 +256,7 @@ def run_async_experiment(cfg: FLConfig, acfg: AsyncConfig) -> AsyncResult:
             merged.append(int(recon[ref].sum()))
             stale_merged.append(0)
         else:
+            orec = obs.get()
             # Swarm-complete fresh updates (identical at every active
             # peer by the quorum definition — sole-writer merge) enter
             # the buffer at staleness 0; the rest go pending until the
@@ -267,6 +269,7 @@ def run_async_experiment(cfg: FLConfig, acfg: AsyncConfig) -> AsyncResult:
             for key in rec.dead_updates:
                 if pending.pop(key, None) is not None:
                     dropped += 1
+                    orec.counter("async.dropped")
             if acfg.overlap:
                 ready_keys = list(rec.late_ready)
             else:
@@ -280,6 +283,7 @@ def run_async_experiment(cfg: FLConfig, acfg: AsyncConfig) -> AsyncResult:
                     continue
                 if r - key[0] > acfg.max_staleness:
                     dropped += 1
+                    orec.counter("async.dropped")
                     continue
                 buffer.append((key[0], ent[0], ent[1]))
             # Entries that could only merge past the bound are masked.
@@ -287,6 +291,7 @@ def run_async_experiment(cfg: FLConfig, acfg: AsyncConfig) -> AsyncResult:
                 if r - key[0] >= acfg.max_staleness:
                     del pending[key]
                     dropped += 1
+                    orec.counter("async.dropped")
             # FedBuff cut: merge the whole buffer once K are available,
             # each down-weighted by its staleness AT MERGE TIME.
             if len(buffer) >= k_eff:
@@ -305,6 +310,18 @@ def run_async_experiment(cfg: FLConfig, acfg: AsyncConfig) -> AsyncResult:
                 for s in stale:
                     if s > 0:
                         hist[s] = hist.get(s, 0) + 1
+                if orec.enabled:
+                    # Merge instant on the session wall clock: the end
+                    # of round r including any boundary drain.
+                    orec.event("async.merge",
+                               t=res.metrics.t_round_s + res.drain_s,
+                               merged=len(buffer),
+                               stale_merged=stale_merged[-1],
+                               pending=len(pending))
+                    orec.counter("async.merges")
+                    late = [s for s in stale if s > 0]
+                    if late:
+                        orec.hist("async.staleness", late)
                 buffer = []
             else:
                 merged.append(0)

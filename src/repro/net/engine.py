@@ -32,6 +32,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro import obs
+
 from .fairshare import (congestion_bound, maxmin_rates, pipeline_starts,
                         transport)
 from .tracker import TrackerControlPlane
@@ -223,7 +225,8 @@ class EventEngine:
             return cflow[o], cend[o]
         return tm.chunk_flow, tm.chunk_end
 
-    def _transport(self, snd, rcv, t0: float, deliver_all_bg: bool = False):
+    def _transport(self, snd, rcv, t0: float, deliver_all_bg: bool = False,
+                   track: str = "fg"):
         """Fair-share transport of one cycle's transfers from ``t0``.
 
         Returns aligned (t_start, t_end) arrays and the barrier instant
@@ -277,6 +280,18 @@ class EventEngine:
             fin[~np.isfinite(fin)] = 0.0
             window = float(np.max(fin, initial=0.0))
             barrier = t0 + float(np.max(fin + lat_pair, initial=0.0))
+            rec = obs.get()
+            if rec.enabled:
+                # One flow per (sender, receiver) pair this cycle —
+                # per-flow granularity keeps recordings tractable.
+                rec.flows(track, fs, fd,
+                          t0 + lat_pair, t0 + lat_pair + fin,
+                          chunks=counts)
+                rec.counter("net.flows_solved", F)
+                rec.counter("net.chunks_moved", len(snd))
+                rec.counter("net.bytes_moved",
+                            len(snd) * self.chunk_bytes)
+                rec.counter("net.fg_solves", tm.n_solves)
         else:
             ts = np.zeros(0, np.float64)
             te = np.zeros(0, np.float64)
@@ -314,21 +329,36 @@ class EventEngine:
             self.n_solves += nsol
             self._bg_rem[border] = rem_after
             oks = np.isfinite(bend)            # sorted-entry delivered
+            rec = obs.get()
             if oks.any():
                 blat = self.lat[bfs] + self.lat[bfd]
                 q = border[oks]
-                self._bg_log.append({
+                batch = {
                     "meta": self._bg_meta[q].copy(),
                     "src": self._bg_src[q].copy(),
                     "dst": self._bg_dst[q].copy(),
                     "t_start": t0 + blat[flow_of[oks]] + bstart[oks],
-                    "t_end": t0 + blat[flow_of[oks]] + bend[oks]})
+                    "t_end": t0 + blat[flow_of[oks]] + bend[oks]}
+                self._bg_log.append(batch)
+                if rec.enabled:
+                    rec.flows("background", batch["src"], batch["dst"],
+                              batch["t_start"], batch["t_end"])
                 done = np.zeros(B, dtype=bool)
                 done[q] = True
                 self._bg_src = self._bg_src[~done]
                 self._bg_dst = self._bg_dst[~done]
                 self._bg_meta = self._bg_meta[~done]
                 self._bg_rem = self._bg_rem[~done]
+            if rec.enabled:
+                # Residual-capacity fill for the async carry: how much
+                # of the queued tail this cycle's idle bandwidth soaked.
+                rec.event("net.bg_fill", t=t0,
+                          window=(float(W) if np.isfinite(W) else -1.0),
+                          queued=int(B), delivered=int(oks.sum()),
+                          solves=int(nsol))
+                rec.counter("net.bg_delivered", int(oks.sum()))
+                rec.counter("net.bg_solves", int(nsol))
+                rec.gauge("net.bg_backlog", int(self._bg_src.size))
         return ts, te, barrier
 
     # ------------------------------------------------------------------
@@ -339,7 +369,7 @@ class EventEngine:
         if len(snd) == 0:
             self.t = t0
             return (np.zeros(0, np.float64), np.zeros(0, np.float64))
-        ts, te, barrier = self._transport(snd, rcv, t0)
+        ts, te, barrier = self._transport(snd, rcv, t0, track="spray")
         self.data_s += barrier - t0
         self.t = barrier
         return ts, te
@@ -350,7 +380,7 @@ class EventEngine:
         if len(snd) == 0:
             self.t = t0                 # an idle cycle still ticks
             return (np.zeros(0, np.float64), np.zeros(0, np.float64))
-        ts, te, barrier = self._transport(snd, rcv, t0)
+        ts, te, barrier = self._transport(snd, rcv, t0, track="warmup")
         self.data_s += barrier - t0
         self.t = barrier
         return ts, te
@@ -359,7 +389,7 @@ class EventEngine:
         """One exact-BT swarming cycle: peer-driven, no tracker RTT."""
         if len(snd) == 0:
             return (np.zeros(0, np.float64), np.zeros(0, np.float64))
-        ts, te, barrier = self._transport(snd, rcv, self.t)
+        ts, te, barrier = self._transport(snd, rcv, self.t, track="bt")
         self.data_s += barrier - self.t
         self.t = barrier
         return ts, te
@@ -368,6 +398,14 @@ class EventEngine:
         """Advance the wall clock (fluid BT phases report durations in
         count space; the engine just books the time)."""
         self.t += float(seconds)
+
+    def control_log(self) -> dict:
+        """The round's control-plane ledger plus the engine's data-path
+        aggregates — the dict ``RoundResult.tracker_log`` carries (the
+        merge used to live inline in the simulator; the typed obs
+        events carry the same facts per cycle)."""
+        return dict(self.tracker.as_log(), data_s=self.data_s,
+                    n_solves=self.n_solves)
 
     # -- background (previous-generation) flows ------------------------
     def set_background(self, src, dst, meta):

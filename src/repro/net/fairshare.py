@@ -36,6 +36,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro import obs
+
 try:                                    # same graceful degradation as
     import jax                          # core.jit_engine: repro.net
     import jax.numpy as jnp             # stays importable without jax
@@ -81,6 +83,9 @@ def maxmin_rates(src: np.ndarray, dst: np.ndarray,
     d = np.asarray(dst, np.int64)
     u = np.asarray(up, np.float64)
     w = np.asarray(down, np.float64)
+    rec = obs.get()
+    if rec.enabled:
+        rec.counter("fairshare.maxmin_calls")
     if _HAS_JAX:
         return _maxmin_jax(s, d, u, w, max_passes)
     return _maxmin_host(s, d, u, w, max_passes)
@@ -296,10 +301,16 @@ def transport(src: np.ndarray, dst: np.ndarray, counts: np.ndarray,
     lb = congestion_bound(s, d, nbytes, u, w)
     quantum = quantum_frac * lb
     if _HAS_JAX:
-        return _transport_jax(s, d, c, nbytes,
-                              float(chunk_bytes), u, w, quantum)
-    return _transport_host(s, d, c, nbytes,
-                           float(chunk_bytes), u, w, quantum)
+        tm = _transport_jax(s, d, c, nbytes,
+                            float(chunk_bytes), u, w, quantum)
+    else:
+        tm = _transport_host(s, d, c, nbytes,
+                             float(chunk_bytes), u, w, quantum)
+    rec = obs.get()
+    if rec.enabled:
+        rec.counter("fairshare.transport_calls")
+        rec.counter("fairshare.solves", tm.n_solves)
+    return tm
 
 
 def _transport_host(src, dst, counts, nbytes, chunk_bytes, up, down,

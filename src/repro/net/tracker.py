@@ -20,6 +20,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 
+from repro import obs
+
 
 @dataclass
 class TrackerControlPlane:
@@ -48,6 +50,11 @@ class TrackerControlPlane:
                             int(n_directives)))
         cost = self.rtt_s + self.solve_s
         self.control_s += cost
+        rec = obs.get()
+        if rec.enabled:
+            rec.event("tracker.cycle", t=t_now, slot=int(slot),
+                      n_directives=int(n_directives), cost_s=cost)
+            rec.counter("tracker.control_s", cost)
         return t_now + cost
 
     def spray_setup(self, t_now: float, n_tunnels: int) -> float:
@@ -55,6 +62,12 @@ class TrackerControlPlane:
         start instant."""
         self.cycles.append((-1, float(t_now), int(n_tunnels)))
         self.control_s += self.spray_setup_s
+        rec = obs.get()
+        if rec.enabled:
+            rec.event("tracker.spray_setup", t=t_now,
+                      n_tunnels=int(n_tunnels),
+                      cost_s=self.spray_setup_s)
+            rec.counter("tracker.control_s", self.spray_setup_s)
         return t_now + self.spray_setup_s
 
     def as_log(self) -> dict:

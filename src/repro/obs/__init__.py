@@ -1,0 +1,36 @@
+"""repro.obs — unified swarm telemetry (ISSUE 10).
+
+One first-class stream for everything the stack used to report through
+ad-hoc fragments (``RoundResult.timings``, ``tracker_log`` dicts,
+``SwarmSession.wall_clock()``): structured spans, typed counters /
+gauges / histograms, per-flow timeline batches — recorded by an
+injectable :class:`Recorder` and consumed by the JSONL / Perfetto
+exporters and the ``python -m repro.obs report`` CLI.
+
+Design contract (see docs/OBSERVABILITY.md):
+
+* **Zero overhead when disabled.**  The module-level active recorder
+  defaults to a :class:`NullRecorder` whose every hook is a no-op and
+  whose ``enabled`` flag is ``False`` — instrumentation sites guard any
+  non-trivial argument construction behind ``if rec.enabled:``.
+* **Determinism-inert.**  The recorder only *observes*: it draws no
+  rng, never feeds back into simulated time, and its measurement clock
+  is injectable (defaulting to a constant zero clock) following the
+  ``core.simulator.set_clock`` idiom — so core stays RNG007-clean and
+  determinism twins are byte-identical with telemetry on or off.
+* **One wall clock.**  Simulated instants are recorded round-relative
+  and shifted by ``Recorder.time_base`` (set per round by
+  :class:`~repro.core.session.SwarmSession` to its ``offsets[-1]``), so
+  a multi-round recording lands on the session's single wall clock.
+"""
+from .recorder import (NullRecorder, Recorder, get, install, recording)
+from .export import (read_jsonl, to_jsonl_rows, to_perfetto,
+                     validate_rows, write_jsonl, write_perfetto)
+from .report import summarize, format_report
+
+__all__ = [
+    "NullRecorder", "Recorder", "get", "install", "recording",
+    "read_jsonl", "to_jsonl_rows", "to_perfetto", "validate_rows",
+    "write_jsonl", "write_perfetto",
+    "summarize", "format_report",
+]

@@ -1,0 +1,23 @@
+"""Known-bad observability fixture: every OBS rule fires here."""
+import time
+
+
+def debug_spray(snd, rcv):
+    print(f"spray {len(snd)} -> {len(rcv)}")        # OBS001
+    return len(snd)
+
+
+def module_report(rows):
+    print("rows:", len(rows))                       # OBS001
+
+
+def inline_timing(fn):
+    t0 = time.perf_counter()                        # OBS002
+    fn()
+    time.sleep(0.01)                                # OBS002
+    return time.perf_counter() - t0                 # OBS002
+
+
+def stamped(payload):
+    return {"at": time.strftime("%H:%M"),           # OBS002
+            "payload": payload}

@@ -1,6 +1,7 @@
-"""repro.analysis swarmlint: rule registry, the three rule families on
+"""repro.analysis swarmlint: rule registry, the four rule families on
 known-bad/known-good fixtures, the justified baseline, and the shipped
-tree's own guarantees (ISSUE 6 acceptance surface)."""
+tree's own guarantees (ISSUE 6 acceptance surface; obs family from
+ISSUE 10)."""
 import json
 import os
 import subprocess
@@ -59,12 +60,14 @@ def test_registry_rejects_duplicate_rule_id():
     assert _REGISTRY["RNG001"] is not Clash
 
 
-def test_all_three_families_registered():
+def test_all_four_families_registered():
     ids = rule_ids()
     assert ids == tuple(sorted(ids))
     assert {"RNG001", "RNG002", "RNG003", "RNG004", "RNG005", "RNG006",
-            "RNG007", "VIS001", "JIT101", "JIT102",
-            "JIT103"} <= set(ids)
+            "RNG007", "VIS001", "JIT101", "JIT102", "JIT103",
+            "OBS001", "OBS002"} <= set(ids)
+    from repro.analysis import FAMILIES
+    assert FAMILIES == ("rng", "visibility", "jit", "obs")
 
 
 # ---------------------------------------------------------------------------
@@ -153,6 +156,30 @@ def test_scorecard_separates_ready_from_worklist():
 
 
 # ---------------------------------------------------------------------------
+# family 4: observability discipline
+# ---------------------------------------------------------------------------
+
+def test_obs_rules_fire_on_known_bad():
+    found = run_on(["obs_bad.py"], families=("obs",))
+    assert fired(found) == {"OBS001", "OBS002"}
+    assert all(f.severity == "error" for f in found)
+    assert len([f for f in found if f.rule == "OBS001"]) == 2
+    hits = [f for f in found if f.rule == "OBS002"]
+    # OBS002 reaches past RNG007's wall-clock set: sleep and strftime
+    # count as inline host-time use too.
+    assert {f.detail for f in hits} == {
+        "time.perf_counter", "time.sleep", "time.strftime"}
+    assert len(hits) == 4
+
+
+def test_obs_rules_silent_on_known_good():
+    """The obs-routed twins of every bad shape — including a *reference*
+    to ``time.perf_counter`` (the measured_clock injection idiom), which
+    must not be mistaken for a call."""
+    assert run_on(["obs_good.py"], families=("obs",)) == []
+
+
+# ---------------------------------------------------------------------------
 # baseline mechanics
 # ---------------------------------------------------------------------------
 
@@ -231,6 +258,12 @@ def test_shipped_tree_visibility_exactly_the_engine_doors():
     assert all(bl.covers(f) for f in found)
     assert all(bl.entries[f.key] and "TODO" not in bl.entries[f.key]
                for f in found)
+
+
+def test_shipped_tree_obs_clean():
+    """No print()/inline time.* survives in core/, net/, fl/ — all
+    telemetry flows through repro.obs and the injectable clocks."""
+    assert collect_findings(_shipped_ctx(), ("obs",)) == []
 
 
 def test_cli_exits_zero_on_shipped_tree():

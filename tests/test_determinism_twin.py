@@ -66,6 +66,51 @@ def test_async_twin_trace_byte_identical(engine):
             f"{CFG.seed} on the {engine!r} engine")
 
 
+@pytest.mark.parametrize("engine", ["slot", "event"])
+def test_telemetry_twin_trace_byte_identical(engine):
+    """ISSUE 10: telemetry is determinism-inert — recording a session
+    perturbs no byte of its trace, on either engine (the recorder only
+    observes: no rng draws, no feedback into simulated time)."""
+    from repro import obs
+    a = _session_trace(engine)
+    with obs.recording() as rec:
+        b = _session_trace(engine)
+    assert rec.rows, "the recorded twin must actually record"
+    assert obs.get().enabled is False, "recorder leaked past the scope"
+    assert len(a) == len(b) and len(a) > 0
+    for k in a.keys():
+        col_a, col_b = getattr(a, k), getattr(b, k)
+        assert col_a.dtype == col_b.dtype, k
+        assert col_a.tobytes() == col_b.tobytes(), (
+            f"column {k!r} differs with telemetry enabled at seed "
+            f"{CFG.seed} on the {engine!r} engine")
+
+
+@pytest.mark.parametrize("engine", ["slot", "event"])
+def test_telemetry_twin_async_carry(engine):
+    """Telemetry on/off parity through the async tail path too (quorum
+    cut, boundary drain, staleness columns)."""
+    from repro import obs
+
+    def once(record: bool):
+        ses = SwarmSession(CFG, time_engine=engine,
+                           net=NET if engine == "event" else None,
+                           evolve_overlay=True)
+        if record:
+            with obs.recording():
+                ses.run(3, quorum_k=CFG.n, tail_mode="drain",
+                        bt_budget=3)
+        else:
+            ses.run(3, quorum_k=CFG.n, tail_mode="drain", bt_budget=3)
+        return ses.trace(include_late=True)
+    a, b = once(False), once(True)
+    assert len(a) == len(b) and (a.staleness > 0).any()
+    for k in a.keys():
+        assert getattr(a, k).tobytes() == getattr(b, k).tobytes(), (
+            f"column {k!r} differs with telemetry enabled on the "
+            f"{engine!r} engine (async drain path)")
+
+
 def test_random_overlay_requires_threaded_rng():
     """Regression pin for the RNG004 fix: the old constant-seed
     fallback handed every un-threaded caller the SAME overlay."""
